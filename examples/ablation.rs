@@ -1,0 +1,54 @@
+//! Ablation playground (the Figure 7 scenario as an application): toggle
+//! each Compass feature from the command line and see the impact.
+//!
+//!     cargo run --release --example ablation -- --rate 2.5 \
+//!         [--no-dynamic-adjust] [--fifo] [--no-locality] [--threshold 2.0]
+
+use compass::gpu::EvictionPolicy;
+use compass::util::args::Args;
+use compass::{ClusterConfig, SchedulerKind, Simulator};
+
+fn main() {
+    let args = Args::from_env();
+    let rate = args.get_f64("rate", 2.5);
+    let jobs = compass::workload::poisson(rate, args.get_usize("jobs", 400), &[], 13);
+
+    let mut cfg = ClusterConfig::default().with_scheduler(SchedulerKind::Compass).with_seed(13);
+    if args.flag("no-dynamic-adjust") {
+        cfg.compass.dynamic_adjust = false;
+    }
+    if args.flag("no-locality") {
+        cfg.compass.model_locality = false;
+    }
+    if args.flag("fifo") {
+        cfg.eviction = EvictionPolicy::Fifo;
+    }
+    cfg.compass.adjust_threshold = args.get_f64("threshold", cfg.compass.adjust_threshold);
+
+    println!(
+        "compass variant: dynamic_adjust={} model_locality={} eviction={:?} threshold={}",
+        cfg.compass.dynamic_adjust, cfg.compass.model_locality, cfg.eviction,
+        cfg.compass.adjust_threshold
+    );
+
+    let base = Simulator::simulate(
+        ClusterConfig::default().with_scheduler(SchedulerKind::Compass).with_seed(13),
+        jobs.clone(),
+    )
+    .metrics;
+    let variant = Simulator::simulate(cfg, jobs).metrics;
+
+    println!("\n{:>22}  {:>10}  {:>10}", "", "full", "variant");
+    println!(
+        "{:>22}  {:>10.2}  {:>10.2}",
+        "mean slow-down", base.mean_slowdown(), variant.mean_slowdown()
+    );
+    println!(
+        "{:>22}  {:>9.1}%  {:>9.1}%",
+        "cache hit rate", base.cache_hit_rate(), variant.cache_hit_rate()
+    );
+    println!(
+        "{:>22}  {:>10.2}  {:>10.2}",
+        "mean latency (s)", base.mean_latency_s(), variant.mean_latency_s()
+    );
+}

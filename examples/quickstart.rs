@@ -1,0 +1,37 @@
+//! Quickstart: build a cluster, generate a small mixed workload, run the
+//! Compass scheduler in the simulator, and print the headline metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use compass::{ClusterConfig, SchedulerKind, Simulator};
+
+fn main() {
+    // The paper's testbed: 5 workers, 16 GB GPU cache each.
+    let cfg = ClusterConfig::default()
+        .with_scheduler(SchedulerKind::Compass)
+        .with_workers(5)
+        .with_seed(42);
+
+    // 200 requests at 2 req/s over the four Figure-1 pipelines.
+    let jobs = compass::workload::poisson(2.0, 200, &[], 7);
+
+    let report = Simulator::simulate(cfg, jobs);
+    let m = &report.metrics;
+
+    println!("Compass quickstart — 200 jobs at 2 req/s on 5 workers");
+    println!("  completed jobs      : {}", m.jobs.len());
+    println!("  mean latency        : {:.2} s", m.mean_latency_s());
+    println!("  mean slow-down      : {:.2}x of the theoretical lower bound", m.mean_slowdown());
+    println!("  GPU cache hit rate  : {:.1}%", m.cache_hit_rate());
+    println!("  GPU utilization     : {:.0}%", m.gpu_utilization());
+    println!("  energy              : {:.0} J", m.gpu_energy_joules());
+
+    // Compare against the Hash load balancer on the identical workload.
+    let hash_cfg = ClusterConfig::default().with_scheduler(SchedulerKind::Hash).with_seed(42);
+    let hash = Simulator::simulate(hash_cfg, compass::workload::poisson(2.0, 200, &[], 7));
+    println!(
+        "\n  vs hash load-balancing: {:.2}x mean slow-down ({:.1}x worse than compass)",
+        hash.metrics.mean_slowdown(),
+        hash.metrics.mean_slowdown() / m.mean_slowdown()
+    );
+}

@@ -1,0 +1,38 @@
+//! Scalability demo (the Figure 10 scenario as an application): sweep the
+//! cluster size at a fixed aggregate request rate and show how many workers
+//! each scheduler actually needs.
+//!
+//!     cargo run --release --example scalability -- [--rate 40] [--jobs 1500]
+
+use compass::util::args::Args;
+use compass::util::table;
+use compass::{ClusterConfig, SchedulerKind, Simulator};
+
+fn main() {
+    let args = Args::from_env();
+    let rate = args.get_f64("rate", 40.0);
+    let n_jobs = args.get_usize("jobs", 1500);
+    let jobs = compass::workload::poisson(rate, n_jobs, &[], 21);
+
+    let sizes = [25usize, 50, 75, 100, 150];
+    let mut rows = Vec::new();
+    for &w in &sizes {
+        let mut cells = vec![w.to_string()];
+        for s in [SchedulerKind::Compass, SchedulerKind::Hash] {
+            let cfg = ClusterConfig::default().with_scheduler(s).with_workers(w).with_seed(21);
+            let m = Simulator::simulate(cfg, jobs.clone()).metrics;
+            cells.push(format!("{:.2}", m.median_slowdown()));
+            cells.push(m.active_workers().to_string());
+        }
+        rows.push(cells);
+    }
+    println!("{rate} req/s mixed workload, {n_jobs} jobs:");
+    print!(
+        "{}",
+        table::render(
+            &["workers", "compass slowdown", "compass active", "hash slowdown", "hash active"],
+            &rows
+        )
+    );
+    println!("\nidle workers under compass can be powered down — the paper's Fig. 10 claim.");
+}

@@ -1,0 +1,50 @@
+//! Production-trace replay (the Figure 9 scenario as an application):
+//! synthesize an Alibaba-like bursty trace, replay it under all four
+//! schedulers, and print per-burst completion behaviour.
+//!
+//!     cargo run --release --example trace_replay [-- --duration 300]
+
+use compass::util::args::Args;
+use compass::util::table;
+use compass::{ClusterConfig, SchedulerKind, Simulator};
+
+fn main() {
+    let args = Args::from_env();
+    let duration = args.get_f64("duration", 300.0);
+    let (jobs, buckets) = compass::workload::alibaba_like(2.0, duration, 99);
+
+    println!("synthesized trace: {} jobs over {:.0} s", jobs.len(), duration);
+    println!("arrival-rate timeline (req/s per 5 s bucket):");
+    let spark: String = buckets
+        .iter()
+        .map(|b| {
+            let levels = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+            let peak = buckets.iter().map(|x| x.rate_per_s).fold(0.0, f64::max);
+            levels[((b.rate_per_s / peak * 9.0) as usize).min(9)]
+        })
+        .collect();
+    println!("  [{spark}]");
+
+    let mut rows = Vec::new();
+    for s in SchedulerKind::ALL {
+        let cfg = ClusterConfig::default().with_scheduler(s).with_seed(5);
+        let m = Simulator::simulate(cfg, jobs.clone()).metrics;
+        let lats: Vec<f64> = m.jobs.iter().map(|j| j.latency_us() as f64 / 1e6).collect();
+        rows.push(vec![
+            s.name().to_string(),
+            format!("{:.2}", compass::util::stats::percentile(&lats, 50.0)),
+            format!("{:.2}", compass::util::stats::percentile(&lats, 95.0)),
+            format!("{:.2}", compass::util::stats::percentile(&lats, 100.0)),
+            format!("{:.2}", m.mean_slowdown()),
+            format!("{:.1}", m.cache_hit_rate()),
+        ]);
+    }
+    print!(
+        "\n{}",
+        table::render(
+            &["scheduler", "p50 (s)", "p95 (s)", "max (s)", "mean slowdown", "hit rate %"],
+            &rows
+        )
+    );
+    println!("\n(expected shape: hash degrades the most through bursts; compass stays lowest)");
+}

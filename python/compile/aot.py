@@ -1,0 +1,116 @@
+"""AOT pipeline: lower every model variant to HLO *text* + write a manifest.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+    <name>.hlo.txt   one per model in MODEL_SPECS
+    manifest.json    {name: {model_id, seq_len, d_model, path, checksum_input,
+                             checksum_output}}
+
+The checksums are abs-sums of a deterministic smoke input/output pair;
+the rust runtime re-runs the same pair at load time as an end-to-end
+numerical handshake between the python and rust halves.
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODEL_SPECS, build_model_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    CRITICAL: the default HLO printer ELIDES large constants ("...") — the
+    baked model weights would silently become garbage on the rust side (the
+    final layernorm masks the damage, so only a numerical handshake catches
+    it). Print with ``print_large_constants=True``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's parser predates newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "..." not in text, "HLO printer still eliding constants"
+    return text
+
+
+def smoke_input(spec) -> jax.Array:
+    """Deterministic smoke-test activation for the rust handshake."""
+    s, d = spec.seq_len, spec.d_model
+    i = jnp.arange(s * d, dtype=jnp.float32).reshape(s, d)
+    return jnp.sin(i * 0.01)
+
+
+def lower_model(name: str) -> tuple[str, dict]:
+    spec = MODEL_SPECS[name]
+    fn, example = build_model_fn(name, use_pallas=True)
+    lowered = jax.jit(fn).lower(example)
+    text = to_hlo_text(lowered)
+
+    x = smoke_input(spec)
+    (y,) = jax.jit(fn)(x)
+    meta = {
+        "model_id": spec.model_id,
+        "seq_len": spec.seq_len,
+        "d_model": spec.d_model,
+        "n_layers": spec.n_layers,
+        "n_heads": spec.n_heads,
+        "path": f"{name}.hlo.txt",
+        "smoke_input_abssum": float(jnp.sum(jnp.abs(x))),
+        "smoke_output_abssum": float(jnp.sum(jnp.abs(y))),
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also write the first model here")
+    ap.add_argument("--only", default=None, help="lower a single model")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    names = [args.only] if args.only else list(MODEL_SPECS)
+    manifest = {}
+    for name in names:
+        text, meta = lower_model(name)
+        (out_dir / meta["path"]).write_text(text)
+        manifest[name] = meta
+        print(f"lowered {name:10s} -> {meta['path']} "
+              f"({len(text) / 1024:.0f} KiB, out_abssum={meta['smoke_output_abssum']:.4f})")
+
+    mpath = out_dir / "manifest.json"
+    existing = json.loads(mpath.read_text()) if mpath.exists() else {}
+    existing.update(manifest)
+    mpath.write_text(json.dumps(existing, indent=2, sort_keys=True))
+    print(f"wrote {mpath} ({len(existing)} models)")
+
+    if args.out:
+        first = names[0]
+        text, _ = lower_model(first)
+        pathlib.Path(args.out).write_text(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the Compass model compute hot-spots.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); ``ref.py`` holds the pure-jnp oracles used by the test suite.
+"""
+
+from .attention import flash_attention
+from .layernorm import layernorm
+from .matmul import tiled_matmul
+
+__all__ = ["flash_attention", "layernorm", "tiled_matmul"]

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: tiled flash-attention with online softmax.
+
+This is the compute hot-spot of every ML vertex in the Compass pipelines
+(the per-model transformer forward pass in ``model.py`` calls it for each
+attention layer).
+
+TPU adaptation of the flash-attention idea (paper targets NVIDIA T4s):
+instead of a CUDA threadblock schedule over shared memory, the HBM->VMEM
+schedule is expressed through ``BlockSpec``s — one Q block is resident in
+VMEM per grid step while K/V are streamed through it block-by-block inside
+the kernel with an online-softmax accumulator, so VMEM footprint is
+O(block_q * d + 2 * block_k * d) regardless of sequence length. The inner
+``q @ k.T`` / ``p @ v`` contractions are plain dots that map onto the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops. Correctness is
+pinned to ``ref.attention_ref`` by the pytest/hypothesis suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                            sm_scale: float):
+    """One grid step: one (batch*head, q-block) tile.
+
+    Ref block shapes: q_ref [1, block_q, d]; k_ref/v_ref [1, S, d];
+    o_ref [1, block_q, d]. K/V are streamed in ``block_k`` slices with the
+    classic online-softmax (m, l, acc) carry.
+    """
+    q = q_ref[0].astype(jnp.float32) * sm_scale
+    block_q, d = q.shape
+    seq_len = k_ref.shape[1]
+    num_kb = seq_len // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [block_q, block_k]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((block_q,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = 16, block_k: int = 16) -> jax.Array:
+    """Tiled attention over [BH, S, D] operands.
+
+    ``block_q``/``block_k`` must divide S (callers pad if not; the model
+    layer always uses power-of-two sequence lengths).
+    """
+    bh, seq_len, d = q.shape
+    if seq_len % block_q or seq_len % block_k:
+        raise ValueError(
+            f"seq_len {seq_len} not divisible by blocks ({block_q},{block_k})")
+    sm_scale = 1.0 / (d ** 0.5)
+    grid = (bh, seq_len // block_q)
+    kernel = functools.partial(
+        _flash_attention_kernel, block_k=block_k, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq_len, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq_len, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: row-blocked layer normalization.
+
+Each grid step normalizes a block of rows held in VMEM. Mean/variance are
+computed in f32 regardless of input dtype (matching the oracle's numerics).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32)
+                  + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              block_rows: int = 16, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis of [T, D]; gamma/beta are [D]."""
+    t, d = x.shape
+    if t % block_rows:
+        raise ValueError(f"rows {t} not divisible by block_rows {block_rows}")
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: tiled matmul (the FFN hot path).
+
+Blocked over (M, N, K) with a VMEM accumulator; the K axis is the innermost
+grid dimension so the accumulator tile stays resident while K blocks stream
+through VMEM. Block sizes default to MXU-friendly multiples; the model layer
+picks blocks that divide its (tiny) dims.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, num_k: int):
+    """Grid step (m, n, k): accumulate x[m,k] @ w[k,n] into acc, flush at k end."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kb == num_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tiled_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 16,
+                 block_n: int = 16, block_k: int = 16) -> jax.Array:
+    """[M, K] @ [K, N] -> [M, N] with VMEM-blocked accumulation."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"dims {(m, k, n)} not divisible by blocks "
+                         f"({block_m},{block_k},{block_n})")
+    num_k = k // block_k
+    grid = (m // block_m, n // block_n, num_k)
+    kernel = functools.partial(_matmul_kernel, num_k=num_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=True,
+    )(x, w)

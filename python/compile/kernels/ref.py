@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written with
+plain jax.numpy ops only. ``python/tests`` asserts allclose between each
+kernel (interpret=True) and its oracle across a hypothesis-driven sweep of
+shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention, no masking.
+
+    Shapes: q,k,v: [BH, S, D] (batch*heads folded into the leading dim).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain 2-D matmul oracle: [M, K] @ [K, N] -> [M, N]."""
+    return jnp.dot(x, w, preferred_element_type=x.dtype)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """Row-wise layer normalization oracle over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def ffn_ref(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    """Transformer feed-forward oracle: GELU MLP. x: [T, D], w1: [D, F], w2: [F, D]."""
+    return jax.nn.gelu(x @ w1) @ w2

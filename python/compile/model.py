@@ -1,0 +1,179 @@
+"""L2: the JAX compute graph executed by every ML vertex in a Compass DFG.
+
+Each of the paper's eight models (OPT-1.3b, Marian, mT5, ViT-GPT2, ESPnet,
+BART, DETR, GLPN-depth) is represented by a *tiny* pre-LN transformer encoder
+instantiated at a model-specific size (the scheduler only ever consumes the
+*profiled* GB-scale sizes and runtimes attached in the rust profile
+repository — see DESIGN.md §3 substitutions — while the compute path runs
+this real network through PJRT).
+
+The forward pass calls the L1 Pallas kernels (``flash_attention``,
+``tiled_matmul``, ``layernorm``); setting ``use_pallas=False`` swaps in the
+pure-jnp oracles from ``kernels.ref`` so the full model has a reference path
+too (used by pytest to pin model-level numerics).
+
+Weights are generated deterministically from the model name so that the AOT
+artifacts embed them as HLO constants: the rust runtime then only feeds
+activations.
+"""
+
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, layernorm, tiled_matmul
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Architecture of one tiny-transformer model variant.
+
+    ``model_id`` is the Compass model-table id (bit position in the SST cache
+    bitmap); it must match ``rust/src/dfg/models.rs``.
+    """
+
+    name: str
+    model_id: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        norms = self.n_layers * 4 * self.d_model + 2 * self.d_model
+        return self.n_layers * per_layer + norms
+
+
+# The eight models of Figure 1, ids matching the rust model table
+# (rust/src/dfg/models.rs). Sizes/seq vary so artifacts genuinely differ.
+MODEL_SPECS = {
+    "opt": ModelSpec("opt", 0, d_model=64, n_heads=4, n_layers=3, d_ff=128, seq_len=32),
+    "marian": ModelSpec("marian", 1, d_model=48, n_heads=3, n_layers=2, d_ff=96, seq_len=32),
+    "mt5": ModelSpec("mt5", 2, d_model=64, n_heads=4, n_layers=2, d_ff=128, seq_len=32),
+    "vit_gpt2": ModelSpec("vit_gpt2", 3, d_model=48, n_heads=3, n_layers=2, d_ff=96, seq_len=16),
+    "espnet": ModelSpec("espnet", 4, d_model=32, n_heads=2, n_layers=2, d_ff=64, seq_len=16),
+    "bart": ModelSpec("bart", 5, d_model=64, n_heads=4, n_layers=2, d_ff=128, seq_len=32),
+    "detr": ModelSpec("detr", 6, d_model=48, n_heads=3, n_layers=2, d_ff=96, seq_len=16),
+    "glpn": ModelSpec("glpn", 7, d_model=32, n_heads=2, n_layers=3, d_ff=64, seq_len=16),
+}
+
+
+def _seed_for(name: str) -> int:
+    """Stable cross-run seed (``hash()`` is salted per-process; sha256 isn't)."""
+    return int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "big")
+
+
+def init_params(spec: ModelSpec) -> dict:
+    """Deterministic weights keyed by model name (baked into the artifact)."""
+    key = jax.random.PRNGKey(_seed_for(spec.name))
+    keys = jax.random.split(key, spec.n_layers * 6)
+    d, f = spec.d_model, spec.d_ff
+    scale = 1.0 / (d ** 0.5)
+    layers = []
+    for i in range(spec.n_layers):
+        k = keys[i * 6:(i + 1) * 6]
+        layers.append({
+            "wq": jax.random.normal(k[0], (d, d), jnp.float32) * scale,
+            "wk": jax.random.normal(k[1], (d, d), jnp.float32) * scale,
+            "wv": jax.random.normal(k[2], (d, d), jnp.float32) * scale,
+            "wo": jax.random.normal(k[3], (d, d), jnp.float32) * scale,
+            "w1": jax.random.normal(k[4], (d, f), jnp.float32) * scale,
+            "w2": jax.random.normal(k[5], (f, d), jnp.float32) * (1.0 / f ** 0.5),
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+        })
+    return {
+        "layers": layers,
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _blk(n: int) -> int:
+    """Largest of {16, 8, 4} dividing n (all model dims are multiples of 4)."""
+    for b in (16, 8, 4):
+        if n % b == 0:
+            return b
+    raise ValueError(f"dim {n} not a multiple of 4")
+
+
+def _mm(x, w, use_pallas):
+    if use_pallas:
+        return tiled_matmul(x, w, block_m=_blk(x.shape[0]),
+                            block_k=_blk(x.shape[1]), block_n=_blk(w.shape[1]))
+    return kref.matmul_ref(x, w)
+
+
+def _ln(x, g, b, use_pallas):
+    if use_pallas:
+        return layernorm(x, g, b, block_rows=_blk(x.shape[0]))
+    return kref.layernorm_ref(x, g, b)
+
+
+def _attn(q, k, v, use_pallas):
+    if use_pallas:
+        blk = _blk(q.shape[1])
+        return flash_attention(q, k, v, block_q=blk, block_k=blk)
+    return kref.attention_ref(q, k, v)
+
+
+def _block(spec: ModelSpec, p: dict, x: jax.Array, use_pallas: bool) -> jax.Array:
+    """One pre-LN transformer block over [S, D] activations."""
+    s, d = x.shape
+    h, hd = spec.n_heads, spec.head_dim
+
+    y = _ln(x, p["ln1_g"], p["ln1_b"], use_pallas)
+    q = _mm(y, p["wq"], use_pallas).reshape(s, h, hd).transpose(1, 0, 2)
+    k = _mm(y, p["wk"], use_pallas).reshape(s, h, hd).transpose(1, 0, 2)
+    v = _mm(y, p["wv"], use_pallas).reshape(s, h, hd).transpose(1, 0, 2)
+    o = _attn(q, k, v, use_pallas)                       # [H, S, hd]
+    o = o.transpose(1, 0, 2).reshape(s, d)
+    x = x + _mm(o, p["wo"], use_pallas)
+
+    y = _ln(x, p["ln2_g"], p["ln2_b"], use_pallas)
+    y = jax.nn.gelu(_mm(y, p["w1"], use_pallas))
+    x = x + _mm(y, p["w2"], use_pallas)
+    return x
+
+
+def forward(spec: ModelSpec, params: dict, x: jax.Array,
+            use_pallas: bool = True) -> jax.Array:
+    """Full forward pass: [S, D] -> [S, D]."""
+    for p in params["layers"]:
+        x = _block(spec, p, x, use_pallas)
+    return _ln(x, params["lnf_g"], params["lnf_b"], use_pallas)
+
+
+def build_model_fn(name: str, use_pallas: bool = True):
+    """Return ``(fn, example_input)`` for AOT lowering.
+
+    ``fn`` closes over deterministic weights (they become HLO constants) and
+    returns a 1-tuple — the rust loader unwraps with ``to_tuple1``.
+    """
+    spec = MODEL_SPECS[name]
+    params = init_params(spec)
+
+    def fn(x):
+        return (forward(spec, params, x, use_pallas=use_pallas),)
+
+    example = jax.ShapeDtypeStruct((spec.seq_len, spec.d_model), jnp.float32)
+    return fn, example
+
+
+def reference_forward(name: str, x: jax.Array) -> jax.Array:
+    """Pure-jnp forward (oracle path) for model-level tests."""
+    spec = MODEL_SPECS[name]
+    params = init_params(spec)
+    return forward(spec, params, x, use_pallas=False)

@@ -1,0 +1,171 @@
+"""Kernel vs oracle allclose — the CORE L1 correctness signal.
+
+Fixed-shape unit tests plus hypothesis sweeps over shapes/dtypes. Every
+kernel runs interpret=True (see kernels/__init__.py), so these pin exactly
+what the AOT artifacts will compute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, layernorm, tiled_matmul
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+class TestAttention:
+    def test_basic(self):
+        q, k, v = (_rand(i, (2, 32, 16)) for i in range(3))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v), ref.attention_ref(q, k, v), **TOL)
+
+    def test_single_head(self):
+        q, k, v = (_rand(i, (1, 16, 8)) for i in range(3))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, block_q=8, block_k=8),
+            ref.attention_ref(q, k, v), **TOL)
+
+    def test_block_shape_invariance(self):
+        """Result must not depend on the tiling decomposition."""
+        q, k, v = (_rand(i, (2, 64, 16)) for i in range(3))
+        a8 = flash_attention(q, k, v, block_q=8, block_k=8)
+        a16 = flash_attention(q, k, v, block_q=16, block_k=16)
+        a_mixed = flash_attention(q, k, v, block_q=16, block_k=8)
+        np.testing.assert_allclose(a8, a16, **TOL)
+        np.testing.assert_allclose(a8, a_mixed, **TOL)
+
+    def test_softmax_rows_sum_via_uniform_v(self):
+        """With v = all-ones, output must be exactly ones (softmax sums to 1)."""
+        q, k = _rand(0, (2, 32, 16)), _rand(1, (2, 32, 16))
+        v = jnp.ones((2, 32, 16), jnp.float32)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v), jnp.ones_like(v), rtol=1e-5, atol=1e-5)
+
+    def test_large_logits_stable(self):
+        """Online softmax must not overflow with large score magnitudes."""
+        q = _rand(0, (1, 32, 16)) * 100.0
+        k = _rand(1, (1, 32, 16)) * 100.0
+        v = _rand(2, (1, 32, 16))
+        out = flash_attention(q, k, v)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_rejects_indivisible_seq(self):
+        q = k = v = jnp.zeros((1, 24, 8))
+        with pytest.raises(ValueError):
+            flash_attention(q, k, v, block_q=16, block_k=16)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bh=st.integers(1, 4),
+        nq=st.sampled_from([1, 2, 4]),
+        nk=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([4, 8, 16, 32]),
+        blk=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, bh, nq, nk, d, blk, seed):
+        s = blk * max(nq, nk)
+        q = _rand(seed, (bh, s, d))
+        k = _rand(seed + 1, (bh, s, d))
+        v = _rand(seed + 2, (bh, s, d))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v, block_q=blk, block_k=blk),
+            ref.attention_ref(q, k, v), **TOL)
+
+
+# ------------------------------------------------------------------ matmul
+
+class TestMatmul:
+    def test_basic(self):
+        x, w = _rand(0, (32, 48)), _rand(1, (48, 64))
+        np.testing.assert_allclose(
+            tiled_matmul(x, w), ref.matmul_ref(x, w), **TOL)
+
+    def test_identity(self):
+        x = _rand(0, (16, 16))
+        np.testing.assert_allclose(
+            tiled_matmul(x, jnp.eye(16)), x, rtol=1e-6, atol=1e-6)
+
+    def test_block_invariance(self):
+        x, w = _rand(0, (32, 32)), _rand(1, (32, 32))
+        a = tiled_matmul(x, w, block_m=8, block_n=8, block_k=8)
+        b = tiled_matmul(x, w, block_m=16, block_n=16, block_k=16)
+        np.testing.assert_allclose(a, b, **TOL)
+
+    def test_rejects_indivisible(self):
+        with pytest.raises(ValueError):
+            tiled_matmul(jnp.zeros((30, 32)), jnp.zeros((32, 32)))
+
+    def test_shape_mismatch_asserts(self):
+        with pytest.raises(AssertionError):
+            tiled_matmul(jnp.zeros((16, 16)), jnp.zeros((32, 16)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 48]),
+        k=st.sampled_from([8, 16, 32, 48]),
+        n=st.sampled_from([8, 16, 32, 48]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        x, w = _rand(seed, (m, k)), _rand(seed + 1, (k, n))
+        np.testing.assert_allclose(
+            tiled_matmul(x, w, block_m=8, block_n=8, block_k=8),
+            ref.matmul_ref(x, w), **TOL)
+
+
+# ---------------------------------------------------------------- layernorm
+
+class TestLayernorm:
+    def test_basic(self):
+        x = _rand(0, (32, 48))
+        g, b = _rand(1, (48,)), _rand(2, (48,))
+        np.testing.assert_allclose(
+            layernorm(x, g, b), ref.layernorm_ref(x, g, b), **TOL)
+
+    def test_unit_gamma_zero_beta_stats(self):
+        """Rows of the normalized output have mean 0 and var 1."""
+        x = _rand(0, (16, 64)) * 5.0 + 3.0
+        y = np.asarray(layernorm(x, jnp.ones(64), jnp.zeros(64)))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.var(-1), 1.0, atol=1e-3)
+
+    def test_constant_rows(self):
+        """A constant row normalizes to beta (variance ~ 0 handled by eps)."""
+        x = jnp.full((16, 32), 7.0)
+        b = _rand(1, (32,))
+        y = layernorm(x, jnp.ones(32), b)
+        np.testing.assert_allclose(y, jnp.broadcast_to(b, (16, 32)),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_rejects_indivisible_rows(self):
+        with pytest.raises(ValueError):
+            layernorm(jnp.zeros((30, 32)), jnp.ones(32), jnp.zeros(32),
+                      block_rows=16)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        t=st.sampled_from([8, 16, 32]),
+        d=st.sampled_from([8, 16, 32, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, t, d, seed):
+        x = _rand(seed, (t, d))
+        g, b = _rand(seed + 1, (d,)), _rand(seed + 2, (d,))
+        np.testing.assert_allclose(
+            layernorm(x, g, b, block_rows=8),
+            ref.layernorm_ref(x, g, b), **TOL)

@@ -1,0 +1,138 @@
+//! Micro-benches on the L3 hot paths (`cargo bench`).
+//!
+//! These are the §Perf targets in EXPERIMENTS.md:
+//!   * Algorithm 1 planning — O(E·W), runs once per job on the request path.
+//!   * Algorithm 2 adjustment — runs once per task completion.
+//!   * The simulator event loop — events/second (the scalability experiment
+//!     pushes hundreds of thousands of events per run).
+//!   * GPU eviction planning — runs on every model fetch.
+
+use compass::config::{ClusterConfig, SchedulerKind};
+use compass::dfg::{pipelines, Job, PipelineKind};
+use compass::net::CostModel;
+use compass::sched::{self, AssignCtx, ClusterView};
+use compass::sst::SstRow;
+use compass::util::bench::Bench;
+use compass::util::rng::Rng;
+use compass::{workload, Simulator};
+
+fn rows(n: usize, rng: &mut Rng) -> Vec<SstRow> {
+    (0..n)
+        .map(|_| SstRow {
+            ft_us: rng.below(5_000_000),
+            cache_bitmap: rng.next_u64() & 0xff,
+            free_cache_bytes: rng.below(16_000_000_000),
+            load_pushed_at: 0,
+            cache_pushed_at: 0,
+        })
+        .collect()
+}
+
+fn main() {
+    let cost = CostModel::default();
+    let mut rng = Rng::new(7);
+
+    // --- Algorithm 1 planning at paper scale (5 workers) and large scale.
+    for &(n_workers, label) in
+        &[(5usize, "plan_alg1_translation_w5"), (250usize, "plan_alg1_translation_w250")]
+    {
+        let cfg = ClusterConfig::default().with_workers(n_workers);
+        let sched = sched::build(&cfg);
+        let dfg = pipelines::translation(&cost);
+        let r = rows(n_workers, &mut rng);
+        let speed = vec![1.0; n_workers];
+        let job = Job { id: 1, kind: PipelineKind::Translation, arrival_us: 0, input_bytes: 1000 };
+        Bench::new(label).run(|| {
+            let view = ClusterView {
+                now: 1_000_000,
+                self_worker: 0,
+                rows: &r,
+                cost: &cost,
+                speed: &speed,
+            };
+            sched.plan(&job, &dfg, &view)
+        });
+    }
+
+    // --- Algorithm 2 dynamic adjustment (reschedule path).
+    {
+        let n_workers = 5;
+        let cfg = ClusterConfig::default().with_workers(n_workers);
+        let sched = sched::build(&cfg);
+        let dfg = pipelines::vpa(&cost);
+        let mut r = rows(n_workers, &mut rng);
+        r[1].ft_us = 60_000_000;
+        let speed = vec![1.0; n_workers];
+        let job = Job { id: 1, kind: PipelineKind::Vpa, arrival_us: 0, input_bytes: 1000 };
+        let outs = [(0usize, 4096u64)];
+        Bench::new("adjust_alg2_reschedule_w5").run(|| {
+            let view = ClusterView {
+                now: 1_000_000,
+                self_worker: 0,
+                rows: &r,
+                cost: &cost,
+                speed: &speed,
+            };
+            let ctx =
+                AssignCtx { job: &job, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
+            sched.assign(&ctx, &view)
+        });
+    }
+
+    // --- Simulator event-loop throughput at paper scale.
+    {
+        let jobs = workload::poisson(2.0, 300, &[], 3);
+        let events = Simulator::simulate(ClusterConfig::default(), jobs.clone()).events_processed;
+        let b = Bench::new("sim_300_jobs_5_workers")
+            .run(|| Simulator::simulate(ClusterConfig::default(), jobs.clone()));
+        println!(
+            "  -> ~{:.2} M events/s ({} events per run)",
+            events as f64 / (b.median_ns / 1e9) / 1e6,
+            events
+        );
+    }
+
+    // --- Scale stress: 100 workers, 40 req/s (Fig. 10 inner loop).
+    {
+        let jobs = workload::poisson(40.0, 1000, &[], 4);
+        let cfg = ClusterConfig::default().with_workers(100);
+        let events = Simulator::simulate(cfg.clone(), jobs.clone()).events_processed;
+        let b = Bench::new("sim_1000_jobs_100_workers")
+            .run(|| Simulator::simulate(cfg.clone(), jobs.clone()));
+        println!(
+            "  -> ~{:.2} M events/s ({} events per run)",
+            events as f64 / (b.median_ns / 1e9) / 1e6,
+            events
+        );
+    }
+
+    // --- GPU cache eviction planning (queue-lookahead).
+    {
+        use compass::gpu::{EvictionPolicy, GpuCache};
+        let mut cache =
+            GpuCache::new(16_000_000_000, EvictionPolicy::QueueLookahead { window: 16 });
+        cache.insert(0, 0);
+        cache.insert(2, 0);
+        cache.insert(1, 0);
+        let lookahead: Vec<u8> = (0..32).map(|i| (i % 8) as u8).collect();
+        Bench::new("gpu_plan_eviction_lookahead")
+            .run(|| cache.plan_eviction(5_000_000_000, &lookahead));
+    }
+
+    // --- Hash scheduler plan (baseline floor for plan cost).
+    {
+        let cfg = ClusterConfig::default().with_scheduler(SchedulerKind::Hash);
+        let sched = sched::build(&cfg);
+        let dfg = pipelines::perception(&cost);
+        let r = rows(5, &mut rng);
+        let speed = vec![1.0; 5];
+        let job = Job { id: 9, kind: PipelineKind::Perception, arrival_us: 0, input_bytes: 1000 };
+        Bench::new("plan_hash_baseline_w5").run(|| {
+            let view =
+                ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+            sched.plan(&job, &dfg, &view)
+        });
+    }
+
+    println!("\nall micro benches complete");
+}

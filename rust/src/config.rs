@@ -1,0 +1,260 @@
+//! Configuration system: cluster, scheduler, and workload parameters.
+//!
+//! Every experiment is a `ClusterConfig` + a workload; the CLI and the
+//! experiment harness build these programmatically, and `from_kv_file`
+//! loads a simple `key = value` config file (TOML-subset) for deployments.
+
+use crate::core::{Micros, GB, MS};
+use crate::gpu::EvictionPolicy;
+use crate::net::CostModel;
+use crate::sst::PushConfig;
+use std::path::Path;
+
+/// Which scheduler drives task placement (§6.2.1 baselines + Compass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedulerKind {
+    Compass,
+    Jit,
+    Heft,
+    Hash,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 4] =
+        [SchedulerKind::Compass, SchedulerKind::Jit, SchedulerKind::Heft, SchedulerKind::Hash];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Compass => "compass",
+            SchedulerKind::Jit => "jit",
+            SchedulerKind::Heft => "heft",
+            SchedulerKind::Hash => "hash",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "compass" | "navigator" => Some(SchedulerKind::Compass),
+            "jit" => Some(SchedulerKind::Jit),
+            "heft" => Some(SchedulerKind::Heft),
+            "hash" => Some(SchedulerKind::Hash),
+            _ => None,
+        }
+    }
+}
+
+/// Compass-specific knobs, including the §6.3 ablation switches.
+#[derive(Debug, Clone, Copy)]
+pub struct CompassConfig {
+    /// Enable the dynamic adjustment phase (Algorithm 2). Ablation:
+    /// "dynamic task scheduling".
+    pub dynamic_adjust: bool,
+    /// Consider peers' GPU cache contents in TD_model estimates (Eq. 2).
+    /// Ablation: "model locality".
+    pub model_locality: bool,
+    /// Algorithm 2 line 2: reschedule when FT(w) > R(t,w) * threshold.
+    pub adjust_threshold: f64,
+    /// Eq. 2 third arm: added cost estimate when placing a model on a
+    /// worker whose cache would need an eviction, as a multiple of the
+    /// mean model fetch time.
+    pub eviction_penalty_factor: f64,
+}
+
+impl Default for CompassConfig {
+    fn default() -> Self {
+        CompassConfig {
+            dynamic_adjust: true,
+            model_locality: true,
+            adjust_threshold: 2.0,
+            eviction_penalty_factor: 1.0,
+        }
+    }
+}
+
+/// Full cluster + scheduling configuration for one run.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub n_workers: usize,
+    /// GPU Navigator-cache capacity per worker (T4: 16 GB, §6).
+    pub gpu_capacity: u64,
+    /// Relative execution speed per worker (R(t,w) = R(t) * speed[w]);
+    /// empty = homogeneous 1.0.
+    pub worker_speed: Vec<f64>,
+    pub cost: CostModel,
+    pub scheduler: SchedulerKind,
+    pub compass: CompassConfig,
+    pub eviction: EvictionPolicy,
+    pub push: PushConfig,
+    /// Relative std-dev of per-instance runtime jitter (§3.2: actual
+    /// runtimes are unpredictable; profiles are means).
+    pub runtime_jitter: f64,
+    /// True-runtime multiplier vs the static profiles (models a
+    /// mis-profiled deployment: actual work is `bias ×` what the profile
+    /// repository claims). 1.0 = accurately profiled.
+    pub runtime_bias: f64,
+    /// EWMA smoothing for the online Workflow Profiles Repository
+    /// (§3.1); 0 disables refinement (estimates stay static).
+    pub profile_alpha: f64,
+    /// Straggler injection (fault model for the §3.2 "unpredictable
+    /// runtimes" claim): each task independently becomes a straggler with
+    /// this probability, running `straggler_factor ×` its sampled runtime.
+    pub straggler_prob: f64,
+    /// Runtime multiplier for injected stragglers.
+    pub straggler_factor: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        // The paper's testbed: 5 workers, 16 GB T4 per worker.
+        ClusterConfig {
+            n_workers: 5,
+            gpu_capacity: 16 * GB,
+            worker_speed: Vec::new(),
+            cost: CostModel::default(),
+            scheduler: SchedulerKind::Compass,
+            compass: CompassConfig::default(),
+            eviction: EvictionPolicy::default(),
+            push: PushConfig::default(),
+            runtime_jitter: 0.10,
+            runtime_bias: 1.0,
+            profile_alpha: 0.0,
+            straggler_prob: 0.0,
+            straggler_factor: 4.0,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_scheduler(mut self, s: SchedulerKind) -> Self {
+        self.scheduler = s;
+        self
+    }
+
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.n_workers = n;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn speed(&self, w: usize) -> f64 {
+        self.worker_speed.get(w).copied().unwrap_or(1.0)
+    }
+
+    /// Load `key = value` lines (a TOML subset: comments with '#',
+    /// strings unquoted or double-quoted, numbers, bools).
+    pub fn from_kv_file(path: &Path) -> anyhow::Result<ClusterConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = ClusterConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let k = k.trim();
+            let v = v.trim().trim_matches('"');
+            match k {
+                "workers" => cfg.n_workers = v.parse()?,
+                "gpu_capacity_gb" => cfg.gpu_capacity = v.parse::<u64>()? * GB,
+                "scheduler" => {
+                    cfg.scheduler = SchedulerKind::parse(v)
+                        .ok_or_else(|| anyhow::anyhow!("unknown scheduler '{v}'"))?
+                }
+                "dynamic_adjust" => cfg.compass.dynamic_adjust = v.parse()?,
+                "model_locality" => cfg.compass.model_locality = v.parse()?,
+                "adjust_threshold" => cfg.compass.adjust_threshold = v.parse()?,
+                "eviction_penalty_factor" => cfg.compass.eviction_penalty_factor = v.parse()?,
+                "eviction" => {
+                    cfg.eviction = match v {
+                        "fifo" => EvictionPolicy::Fifo,
+                        "lookahead" => EvictionPolicy::default(),
+                        other => anyhow::bail!("unknown eviction policy '{other}'"),
+                    }
+                }
+                "lookahead_window" => {
+                    cfg.eviction = EvictionPolicy::QueueLookahead { window: v.parse()? }
+                }
+                "push_interval_ms" => {
+                    let us: Micros = v.parse::<u64>()? * MS;
+                    cfg.push = PushConfig { load_interval_us: us, cache_interval_us: us };
+                }
+                "load_push_interval_ms" => cfg.push.load_interval_us = v.parse::<u64>()? * MS,
+                "cache_push_interval_ms" => cfg.push.cache_interval_us = v.parse::<u64>()? * MS,
+                "runtime_jitter" => cfg.runtime_jitter = v.parse()?,
+                "runtime_bias" => cfg.runtime_bias = v.parse()?,
+                "profile_alpha" => cfg.profile_alpha = v.parse()?,
+                "straggler_prob" => cfg.straggler_prob = v.parse()?,
+                "straggler_factor" => cfg.straggler_factor = v.parse()?,
+                "seed" => cfg.seed = v.parse()?,
+                other => anyhow::bail!("line {}: unknown key '{other}'", lineno + 1),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn default_matches_paper_testbed() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.n_workers, 5);
+        assert_eq!(c.gpu_capacity, 16 * GB);
+        assert_eq!(c.scheduler, SchedulerKind::Compass);
+    }
+
+    #[test]
+    fn scheduler_parse_aliases() {
+        assert_eq!(SchedulerKind::parse("navigator"), Some(SchedulerKind::Compass));
+        assert_eq!(SchedulerKind::parse("HEFT"), Some(SchedulerKind::Heft));
+        assert_eq!(SchedulerKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn kv_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("compass_cfg_{}.toml", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        writeln!(
+            f,
+            "# test config\nworkers = 7\nscheduler = \"jit\"\n\
+             gpu_capacity_gb = 24\npush_interval_ms = 100\nseed = 9"
+        )
+        .unwrap();
+        let c = ClusterConfig::from_kv_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(c.n_workers, 7);
+        assert_eq!(c.scheduler, SchedulerKind::Jit);
+        assert_eq!(c.gpu_capacity, 24 * GB);
+        assert_eq!(c.push.load_interval_us, 100_000);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn kv_file_rejects_unknown_key() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("compass_badcfg_{}.toml", std::process::id()));
+        std::fs::write(&path, "frobnicate = 3\n").unwrap();
+        let err = ClusterConfig::from_kv_file(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(err.to_string().contains("unknown key"));
+    }
+
+    #[test]
+    fn speed_defaults_homogeneous() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.speed(0), 1.0);
+        assert_eq!(c.speed(4), 1.0);
+    }
+}

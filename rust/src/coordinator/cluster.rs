@@ -1,0 +1,665 @@
+//! The live cluster: worker threads + message fabric + shared SST + PJRT.
+//!
+//! Event-for-event this mirrors the simulator (`sim::Simulator`): the same
+//! dispatcher rules, fetch/execute overlap, join early-send, and SST push
+//! rate-limiting — but driven by wall-clock time (scaled) and real message
+//! passing between threads, with each ML vertex running its AOT-compiled
+//! model through PJRT. This is the system `exp::validate` compares against
+//! the simulator, reproducing the paper's §5.4 validation.
+
+use super::network::{run_fabric, Parcel};
+use crate::config::ClusterConfig;
+use crate::core::{hash_pair, Micros, ModelId, TaskId, WorkerId};
+use crate::dfg::models::{model, model_bytes};
+use crate::dfg::{pipelines, Adfg, Dfg, Job};
+use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
+use crate::runtime::Runtime;
+use crate::sched::{self, AssignCtx, ClusterView, Scheduler};
+use crate::sim::QTask;
+use crate::sst::{Sst, SstRow};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Live-mode specific knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveConfig {
+    /// Profiled-time / wall-time ratio. 100 ⇒ a 300 s workload replays in
+    /// 3 s while preserving all cost ratios. 1 ⇒ real time.
+    pub time_scale: f64,
+    /// Hard wall-clock cap for one run.
+    pub wall_timeout: Duration,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig { time_scale: 100.0, wall_timeout: Duration::from_secs(120) }
+    }
+}
+
+/// Messages delivered to worker threads via the fabric.
+enum Msg {
+    /// Client request arriving at the ingress worker.
+    Job { job_idx: usize },
+    /// ADFG dispatch: task joins this worker's execution queue.
+    Enqueue { job_idx: usize, task: TaskId },
+    /// One input object for (job, task) landed here.
+    Input { job_idx: usize, task: TaskId },
+    /// Self-scheduled PCIe fetch completion.
+    FetchDone { model: ModelId },
+    /// Self-scheduled execution completion.
+    ExecDone { job_idx: usize, task: TaskId },
+    Stop,
+}
+
+/// Mutable per-job state shared across workers (stands in for the ADFG
+/// piggybacking + Cascade object metadata of the real system).
+struct LiveJob {
+    job: Job,
+    adfg: Adfg,
+    inputs_arrived: Vec<usize>,
+    remaining_preds: Vec<usize>,
+    output_worker: Vec<Option<WorkerId>>,
+    sent: Vec<Vec<bool>>,
+}
+
+struct Shared {
+    cfg: ClusterConfig,
+    live: LiveConfig,
+    dfgs: Vec<Dfg>,
+    scheduler: Box<dyn Scheduler>,
+    /// Artifacts directory; each worker thread loads its *own* PJRT client
+    /// and executables from it (the xla handles are not Send — and a real
+    /// worker owns its own GPU anyway).
+    artifacts: Option<std::path::PathBuf>,
+    sst: Mutex<Sst>,
+    jobs: Mutex<Vec<LiveJob>>,
+    speed: Vec<f64>,
+    /// Profiled-time zero. Set *after* every worker finished loading its
+    /// PJRT runtime (startup must not count as queueing delay).
+    epoch: Mutex<Instant>,
+    net_tx: Sender<Parcel<Msg>>,
+    done_tx: Sender<JobRecord>,
+    pjrt_execs: AtomicU64,
+    pjrt_exec_ns: AtomicU64,
+}
+
+impl Shared {
+    /// Profiled-time "now" in µs.
+    fn now(&self) -> Micros {
+        let epoch = *self.epoch.lock().unwrap();
+        (epoch.elapsed().as_micros() as f64 * self.live.time_scale) as Micros
+    }
+
+    /// Convert a profiled duration to wall-clock.
+    fn to_wall(&self, profiled_us: Micros) -> Duration {
+        Duration::from_micros((profiled_us as f64 / self.live.time_scale) as u64)
+    }
+
+    fn send(&self, to: WorkerId, delay_profiled_us: Micros, msg: Msg) {
+        let _ = self
+            .net_tx
+            .send(Parcel { to, delay: self.to_wall(delay_profiled_us), msg });
+    }
+}
+
+/// One worker node's thread-local state and main loop.
+struct WorkerNode {
+    id: WorkerId,
+    shared: Arc<Shared>,
+    /// This worker's own PJRT client + compiled models (loaded in-thread).
+    runtime: Option<Runtime>,
+    queue: Vec<QTask>,
+    gpu: crate::gpu::GpuCache,
+    running: Option<QTask>,
+    /// Profiled-time end of the running task (for FT estimates).
+    exec_end: Micros,
+    fetching: Option<ModelId>,
+    busy_us: Micros,
+    executed: u64,
+    rng: Rng,
+    rx: Receiver<Msg>,
+}
+
+impl WorkerNode {
+    fn live_row(&self, now: Micros) -> SstRow {
+        let remaining: Micros = self.queue.iter().map(|q| q.runtime_us).sum();
+        let base = if self.running.is_some() { self.exec_end.max(now) } else { now };
+        SstRow {
+            ft_us: base + remaining,
+            cache_bitmap: self.gpu.bitmap(),
+            free_cache_bytes: self.gpu.free_bytes(),
+            load_pushed_at: now,
+            cache_pushed_at: now,
+        }
+    }
+
+    fn push_sst(&self, now: Micros) {
+        let row = self.live_row(now);
+        let mut sst = self.shared.sst.lock().unwrap();
+        sst.push_load(self.id, row.ft_us, now);
+        sst.push_cache(self.id, row.cache_bitmap, row.free_cache_bytes, now);
+    }
+
+    /// Copy published rows, refreshing our own row live.
+    fn view_rows(&self, now: Micros) -> Vec<SstRow> {
+        let mut rows = self.shared.sst.lock().unwrap().rows().to_vec();
+        rows[self.id] = self.live_row(now);
+        rows
+    }
+
+    /// Run `assign` for a dispatchable task and ship ADFG + inputs.
+    fn assign_and_dispatch(&self, job_idx: usize, task: TaskId) {
+        let sh = &self.shared;
+        let now = sh.now();
+        let rows = self.view_rows(now);
+        let mut jobs = sh.jobs.lock().unwrap();
+        let (target, pred_outputs) = {
+            let js = &jobs[job_idx];
+            let dfg = &sh.dfgs[js.job.kind.index()];
+            let pred_outputs: Vec<(WorkerId, u64)> = if dfg.preds[task].is_empty() {
+                vec![(self.id, js.job.input_bytes)]
+            } else {
+                dfg.preds[task]
+                    .iter()
+                    .map(|&p| {
+                        (js.output_worker[p].expect("pred done"), dfg.vertices[p].output_bytes)
+                    })
+                    .collect()
+            };
+            let view = ClusterView {
+                now,
+                self_worker: self.id,
+                rows: &rows,
+                cost: &sh.cfg.cost,
+                speed: &sh.speed,
+            };
+            let ctx = AssignCtx {
+                job: &js.job,
+                dfg,
+                task,
+                planned: js.adfg.get(task),
+                pred_outputs: &pred_outputs,
+            };
+            (sh.scheduler.assign(&ctx, &view), pred_outputs)
+        };
+        jobs[job_idx].adfg.set(task, target);
+
+        let delta = if target == self.id { 0 } else { sh.cfg.cost.delta_net_us };
+        sh.send(target, delta, Msg::Enqueue { job_idx, task });
+
+        let dfg_idx = jobs[job_idx].job.kind.index();
+        let preds = sh.dfgs[dfg_idx].preds[task].clone();
+        if preds.is_empty() {
+            let td = sh.cfg.cost.td_input(pred_outputs[0].1, self.id, target);
+            sh.send(target, td, Msg::Input { job_idx, task });
+        } else {
+            for &p in &preds {
+                let slot = sh.dfgs[dfg_idx].succs[p].iter().position(|&s| s == task).unwrap();
+                if jobs[job_idx].sent[p][slot] {
+                    continue;
+                }
+                jobs[job_idx].sent[p][slot] = true;
+                let src = jobs[job_idx].output_worker[p].unwrap();
+                let bytes = sh.dfgs[dfg_idx].vertices[p].output_bytes;
+                let td = sh.cfg.cost.td_input(bytes, src, target);
+                sh.send(target, td, Msg::Input { job_idx, task });
+            }
+        }
+    }
+
+    /// Run the real PJRT forward pass for this vertex's model.
+    fn pjrt_execute(&self, m: ModelId) {
+        if let Some(rt) = &self.runtime {
+            if let Some(cm) = rt.get(model(m).artifact) {
+                let t0 = Instant::now();
+                let x = cm.smoke_input();
+                if let Ok(y) = cm.execute(&x) {
+                    std::hint::black_box(y.len());
+                }
+                self.shared.pjrt_execs.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .pjrt_exec_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// The dispatcher scan — mirrors `sim::Simulator::try_dispatch`.
+    fn try_dispatch(&mut self) {
+        let sh = self.shared.clone();
+        let now = sh.now();
+        let jobs = sh.jobs.lock().unwrap();
+
+        // Fetch scan (PCIe serial; overlaps execution).
+        if self.fetching.is_none() {
+            let lookahead: Vec<ModelId> = self.queue.iter().filter_map(|q| q.model).collect();
+            let mut fetch: Option<(usize, ModelId)> = None;
+            for (i, qt) in self.queue.iter().enumerate() {
+                let js = &jobs[qt.job_idx];
+                let dfg = &sh.dfgs[js.job.kind.index()];
+                let needed = dfg.preds[qt.task].len().max(1);
+                if js.inputs_arrived[qt.task] < needed {
+                    continue;
+                }
+                if let Some(m) = qt.model {
+                    if !self.gpu.contains(m) {
+                        if self.gpu.plan_eviction(model_bytes(m), &lookahead).is_some() {
+                            fetch = Some((i, m));
+                        }
+                        break;
+                    }
+                }
+            }
+            if let Some((i, m)) = fetch {
+                let victims = self
+                    .gpu
+                    .plan_eviction(model_bytes(m), &lookahead)
+                    .expect("eviction plan vanished");
+                for v in victims {
+                    self.gpu.evict(v, now);
+                }
+                self.gpu.record_miss();
+                self.queue[i].caused_fetch = true;
+                self.fetching = Some(m);
+                let td = sh.cfg.cost.td_model(model_bytes(m));
+                sh.send(self.id, td, Msg::FetchDone { model: m });
+            }
+        }
+
+        // Start scan (GPU executes one task at a time).
+        if self.running.is_none() {
+            let mut start: Option<usize> = None;
+            for (i, qt) in self.queue.iter().enumerate() {
+                let js = &jobs[qt.job_idx];
+                let dfg = &sh.dfgs[js.job.kind.index()];
+                let needed = dfg.preds[qt.task].len().max(1);
+                if js.inputs_arrived[qt.task] < needed {
+                    continue;
+                }
+                match qt.model {
+                    Some(m) if !self.gpu.contains(m) => continue,
+                    _ => {
+                        start = Some(i);
+                        break;
+                    }
+                }
+            }
+            drop(jobs);
+            if let Some(i) = start {
+                let qt = self.queue.remove(i);
+                if let Some(m) = qt.model {
+                    if !qt.caused_fetch {
+                        self.gpu.record_hit();
+                    }
+                    self.gpu.pin(m);
+                    // Real compute, inside the task's profiled window.
+                    self.pjrt_execute(m);
+                }
+                self.busy_us += qt.runtime_us;
+                self.executed += 1;
+                let delay = qt.runtime_us;
+                let (job_idx, task) = (qt.job_idx, qt.task);
+                self.exec_end = sh.now() + delay;
+                self.running = Some(qt);
+                sh.send(self.id, delay, Msg::ExecDone { job_idx, task });
+            }
+        }
+    }
+
+    fn handle_exec_done(&mut self, job_idx: usize, task: TaskId) {
+        let sh = self.shared.clone();
+        let qt = self.running.take().expect("exec done without running");
+        debug_assert_eq!((qt.job_idx, qt.task), (job_idx, task));
+        if let Some(m) = qt.model {
+            self.gpu.unpin(m);
+        }
+        let now = sh.now();
+
+        let (exit, succs, dfg_idx) = {
+            let jobs = sh.jobs.lock().unwrap();
+            let dfg_idx = jobs[job_idx].job.kind.index();
+            let d = &sh.dfgs[dfg_idx];
+            (d.exit, d.succs[task].clone(), dfg_idx)
+        };
+        {
+            let mut jobs = sh.jobs.lock().unwrap();
+            jobs[job_idx].output_worker[task] = Some(self.id);
+        }
+
+        if task == exit {
+            let jobs = sh.jobs.lock().unwrap();
+            let js = &jobs[job_idx];
+            let _ = sh.done_tx.send(JobRecord {
+                kind: js.job.kind,
+                arrival_us: js.job.arrival_us,
+                completion_us: now,
+                lower_bound_us: sh.dfgs[dfg_idx].lower_bound_us,
+            });
+        }
+
+        for (slot, &s) in succs.iter().enumerate() {
+            let ready = {
+                let mut jobs = sh.jobs.lock().unwrap();
+                jobs[job_idx].remaining_preds[s] -= 1;
+                jobs[job_idx].remaining_preds[s] == 0
+            };
+            if ready {
+                self.assign_and_dispatch(job_idx, s);
+            } else {
+                // Join early-send when the placement is pre-coordinated.
+                let mut jobs = sh.jobs.lock().unwrap();
+                let dfg = &sh.dfgs[dfg_idx];
+                if dfg.is_join(s) {
+                    if let Some(target) = jobs[job_idx].adfg.get(s) {
+                        if !jobs[job_idx].sent[task][slot] {
+                            jobs[job_idx].sent[task][slot] = true;
+                            let bytes = dfg.vertices[task].output_bytes;
+                            let td = sh.cfg.cost.td_input(bytes, self.id, target);
+                            sh.send(target, td, Msg::Input { job_idx, task: s });
+                        }
+                    }
+                }
+            }
+        }
+        self.try_dispatch();
+    }
+
+    fn handle_job(&mut self, job_idx: usize) {
+        let sh = self.shared.clone();
+        let now = sh.now();
+        let rows = self.view_rows(now);
+        let (entry, adfg) = {
+            let jobs = sh.jobs.lock().unwrap();
+            let js = &jobs[job_idx];
+            let dfg = &sh.dfgs[js.job.kind.index()];
+            let view = ClusterView {
+                now,
+                self_worker: self.id,
+                rows: &rows,
+                cost: &sh.cfg.cost,
+                speed: &sh.speed,
+            };
+            (dfg.entry, sh.scheduler.plan(&js.job, dfg, &view))
+        };
+        sh.jobs.lock().unwrap()[job_idx].adfg = adfg;
+        self.assign_and_dispatch(job_idx, entry);
+    }
+
+    fn handle_enqueue(&mut self, job_idx: usize, task: TaskId) {
+        let sh = self.shared.clone();
+        let (base, model) = {
+            let jobs = sh.jobs.lock().unwrap();
+            let dfg = &sh.dfgs[jobs[job_idx].job.kind.index()];
+            (
+                (dfg.vertices[task].mean_runtime_us as f64 * sh.speed[self.id]).max(1.0),
+                dfg.vertices[task].model,
+            )
+        };
+        let runtime = self.rng.jitter(base, sh.cfg.runtime_jitter, 100.0) as Micros;
+        self.queue.push(QTask { job_idx, task, model, runtime_us: runtime, caused_fetch: false });
+        self.try_dispatch();
+    }
+
+    fn run(mut self, ready_tx: Sender<WorkerId>) -> WorkerMetrics {
+        // Load this worker's own PJRT client + executables (not Send, so
+        // construction must happen inside the thread).
+        if let Some(dir) = &self.shared.artifacts {
+            match Runtime::load(dir) {
+                Ok(rt) => self.runtime = Some(rt),
+                Err(e) => eprintln!("worker {}: PJRT load failed: {e:#}", self.id),
+            }
+        }
+        // Signal readiness; the leader resets the epoch once everyone is up.
+        let _ = ready_tx.send(self.id);
+        drop(ready_tx);
+        let push_wall = self.shared.to_wall(self.shared.cfg.push.load_interval_us);
+        let mut next_push = Instant::now();
+        loop {
+            // Rate-limited SST push on schedule.
+            let now_wall = Instant::now();
+            if now_wall >= next_push {
+                self.push_sst(self.shared.now());
+                next_push = now_wall + push_wall;
+            }
+            let timeout = next_push.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(timeout) {
+                Ok(Msg::Job { job_idx }) => self.handle_job(job_idx),
+                Ok(Msg::Enqueue { job_idx, task }) => self.handle_enqueue(job_idx, task),
+                Ok(Msg::Input { job_idx, task }) => {
+                    self.shared.jobs.lock().unwrap()[job_idx].inputs_arrived[task] += 1;
+                    self.try_dispatch();
+                }
+                Ok(Msg::FetchDone { model }) => {
+                    debug_assert_eq!(self.fetching, Some(model));
+                    self.fetching = None;
+                    self.gpu.insert(model, self.shared.now());
+                    self.try_dispatch();
+                }
+                Ok(Msg::ExecDone { job_idx, task }) => self.handle_exec_done(job_idx, task),
+                Ok(Msg::Stop) => break,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let span = self.shared.now();
+        self.gpu.advance_time(span);
+        let s = self.gpu.stats;
+        WorkerMetrics {
+            busy_us: self.busy_us,
+            hits: s.hits,
+            misses: s.misses,
+            fetches: s.fetches,
+            evictions: s.evictions,
+            cache_byte_time: s.byte_time_integral,
+            gpu_capacity: self.gpu.capacity(),
+            active: self.executed > 0,
+        }
+    }
+}
+
+/// Report from one live run.
+pub struct LiveReport {
+    pub metrics: MetricsSink,
+    pub pjrt_executions: u64,
+    pub mean_pjrt_exec_us: u64,
+}
+
+pub struct LiveCluster;
+
+impl LiveCluster {
+    /// Run `jobs` through a live cluster; blocks until all complete (or the
+    /// wall timeout trips, which is an error).
+    pub fn run(
+        cfg: ClusterConfig,
+        live: LiveConfig,
+        artifacts: Option<std::path::PathBuf>,
+        jobs: Vec<Job>,
+    ) -> Result<LiveReport> {
+        let n_jobs = jobs.len();
+        let n_workers = cfg.n_workers;
+        let dfgs = pipelines::all(&cfg.cost);
+        let scheduler = sched::build(&cfg);
+        let speed: Vec<f64> = (0..n_workers).map(|w| cfg.speed(w)).collect();
+
+        let live_jobs: Vec<LiveJob> = jobs
+            .iter()
+            .map(|j| {
+                let dfg = &dfgs[j.kind.index()];
+                let n = dfg.len();
+                LiveJob {
+                    job: j.clone(),
+                    adfg: Adfg::unassigned(n),
+                    inputs_arrived: vec![0; n],
+                    remaining_preds: (0..n).map(|t| dfg.preds[t].len()).collect(),
+                    output_worker: vec![None; n],
+                    sent: (0..n).map(|t| vec![false; dfg.succs[t].len()]).collect(),
+                }
+            })
+            .collect();
+
+        let (net_tx, net_rx) = channel::<Parcel<Msg>>();
+        let (done_tx, done_rx) = channel::<JobRecord>();
+        let mut worker_txs = Vec::new();
+        let mut worker_rxs = Vec::new();
+        for _ in 0..n_workers {
+            let (tx, rx) = channel::<Msg>();
+            worker_txs.push(tx);
+            worker_rxs.push(rx);
+        }
+
+        let shared = Arc::new(Shared {
+            speed,
+            dfgs,
+            scheduler,
+            artifacts,
+            sst: Mutex::new(Sst::new(n_workers)),
+            jobs: Mutex::new(live_jobs),
+            epoch: Mutex::new(Instant::now()),
+            net_tx: net_tx.clone(),
+            done_tx,
+            pjrt_execs: AtomicU64::new(0),
+            pjrt_exec_ns: AtomicU64::new(0),
+            live,
+            cfg,
+        });
+
+        let fabric = std::thread::spawn(move || run_fabric(net_rx, worker_txs.clone()));
+
+        let (ready_tx, ready_rx) = channel::<WorkerId>();
+        let mut handles = Vec::new();
+        let mut rng = Rng::new(shared.cfg.seed ^ 0x11fe);
+        for (id, rx) in worker_rxs.into_iter().enumerate() {
+            // WorkerNode is !Send (it owns PJRT handles), so it is
+            // constructed inside its own thread from Send-able parts.
+            let sh = shared.clone();
+            let worker_rng = rng.fork();
+            let rtx = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let node = WorkerNode {
+                    id,
+                    gpu: crate::gpu::GpuCache::new(sh.cfg.gpu_capacity, sh.cfg.eviction),
+                    shared: sh,
+                    runtime: None,
+                    queue: Vec::new(),
+                    running: None,
+                    exec_end: 0,
+                    fetching: None,
+                    busy_us: 0,
+                    executed: 0,
+                    rng: worker_rng,
+                    rx,
+                };
+                node.run(rtx)
+            }));
+        }
+        drop(ready_tx);
+
+        // Barrier: wait for every worker to finish its (possibly slow) PJRT
+        // load, then reset profiled-time zero so startup isn't billed as
+        // queueing delay.
+        for _ in 0..n_workers {
+            ready_rx
+                .recv_timeout(live.wall_timeout)
+                .map_err(|_| anyhow::anyhow!("worker failed to become ready"))?;
+        }
+        *shared.epoch.lock().unwrap() = Instant::now();
+
+        // Client: replay arrivals on the scaled clock.
+        {
+            let sh = shared.clone();
+            std::thread::spawn(move || {
+                // Collect arrivals FIRST: holding the jobs lock across the
+                // pacing sleeps below would stall every worker.
+                let arrivals: Vec<Micros> = {
+                    let jobs = sh.jobs.lock().unwrap();
+                    jobs.iter().map(|j| j.job.arrival_us).collect()
+                };
+                for (idx, arrival) in arrivals.into_iter().enumerate() {
+                    let due = sh.to_wall(arrival);
+                    let elapsed = sh.epoch.lock().unwrap().elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                    let ingress = (hash_pair(idx as u64, 0x1693_55aa) % sh.cfg.n_workers as u64)
+                        as WorkerId;
+                    sh.send(ingress, 0, Msg::Job { job_idx: idx });
+                }
+            });
+        }
+
+        // Collect completions.
+        let deadline = Instant::now() + live.wall_timeout;
+        let mut records = Vec::with_capacity(n_jobs);
+        while records.len() < n_jobs {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                anyhow::bail!("live run timed out with {}/{} jobs done", records.len(), n_jobs);
+            }
+            match done_rx.recv_timeout(left.min(Duration::from_millis(200))) {
+                Ok(r) => records.push(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("workers died before completing the workload")
+                }
+            }
+        }
+
+        // Shut down.
+        for w in 0..n_workers {
+            shared.send(w, 0, Msg::Stop);
+        }
+        let worker_metrics: Vec<WorkerMetrics> =
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+        let pjrt_executions = shared.pjrt_execs.load(Ordering::Relaxed);
+        let pjrt_ns = shared.pjrt_exec_ns.load(Ordering::Relaxed);
+        drop(net_tx);
+        drop(shared);
+        let _ = fabric.join();
+
+        let span = records.iter().map(|r| r.completion_us).max().unwrap_or(0);
+        let metrics = MetricsSink {
+            jobs: records,
+            workers: worker_metrics,
+            span_us: span,
+            incomplete: 0,
+        };
+        Ok(LiveReport {
+            metrics,
+            pjrt_executions,
+            mean_pjrt_exec_us: pjrt_ns / 1000 / pjrt_executions.max(1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn live_cluster_completes_workload_without_runtime() {
+        let cfg = ClusterConfig::default().with_seed(3);
+        let live = LiveConfig { time_scale: 400.0, wall_timeout: Duration::from_secs(60) };
+        let jobs = workload::poisson(2.0, 12, &[], 99);
+        let rep = LiveCluster::run(cfg, live, None, jobs).unwrap();
+        assert_eq!(rep.metrics.jobs.len(), 12);
+        assert!(rep.metrics.mean_slowdown() >= 0.8);
+        assert!(rep.metrics.cache_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn live_cluster_all_schedulers() {
+        use crate::config::SchedulerKind;
+        for kind in SchedulerKind::ALL {
+            let cfg = ClusterConfig::default().with_scheduler(kind).with_seed(4);
+            let live = LiveConfig { time_scale: 500.0, wall_timeout: Duration::from_secs(60) };
+            let jobs = workload::poisson(1.0, 6, &[], 7);
+            let rep = LiveCluster::run(cfg, live, None, jobs).unwrap();
+            assert_eq!(rep.metrics.jobs.len(), 6, "{kind:?}");
+        }
+    }
+}

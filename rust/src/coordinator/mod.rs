@@ -1,0 +1,66 @@
+//! Live multi-worker coordinator: the deployed form of the system.
+//!
+//! Worker *threads* (one per worker node) own their execution queue and GPU
+//! cache, exchange ADFG dispatch messages and intermediate outputs through
+//! a delay-modeling network thread, publish SST rows at the configured push
+//! rate, and execute each ML vertex **for real** through the PJRT runtime
+//! (the AOT-compiled tiny transformer for that vertex's model). Python is
+//! never on this path.
+//!
+//! Profiled durations (model fetch over PCIe, network transfers, the resid-
+//! ual of each task's profiled runtime beyond the real PJRT compute) are
+//! scaled down by `time_scale` so a minutes-long workload replays in
+//! seconds while preserving every ratio the scheduler reasons about —
+//! the same rescaling trick the paper applies to the Alibaba trace. With
+//! `time_scale = 1` the coordinator runs at profiled speed.
+//!
+//! `exp::validate` replays one workload through this coordinator and the
+//! simulator and checks the medians agree — the paper's §5.4 validation.
+
+mod cluster;
+mod network;
+
+pub use cluster::{LiveCluster, LiveConfig, LiveReport};
+
+use crate::util::args::Args;
+
+/// `compass serve` CLI: run the live coordinator on a Poisson workload.
+pub fn cli_serve(args: &Args) -> anyhow::Result<()> {
+    use crate::config::{ClusterConfig, SchedulerKind};
+    let scheduler = SchedulerKind::parse(args.get_or("scheduler", "compass"))
+        .ok_or_else(|| anyhow::anyhow!("unknown scheduler"))?;
+    let cfg = ClusterConfig::default()
+        .with_scheduler(scheduler)
+        .with_workers(args.get_usize("workers", 5))
+        .with_seed(args.get_u64("seed", 42));
+    let rate = args.get_f64("rate", 2.0);
+    let n_jobs = args.get_usize("jobs", 40);
+    let seed = cfg.seed ^ 0x9e37;
+    let jobs = crate::workload::poisson(rate, n_jobs, &[], seed);
+
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::artifacts_dir);
+    let metas = crate::runtime::Runtime::read_manifest(&artifacts)?;
+    println!("{} model artifacts in {}", metas.len(), artifacts.display());
+
+    let live = LiveConfig { time_scale: args.get_f64("time-scale", 100.0), ..Default::default() };
+    let report = LiveCluster::run(cfg, live, Some(artifacts), jobs)?;
+    let m = &report.metrics;
+    println!(
+        "served {} jobs | mean latency {:.2} s (profiled time) | mean slowdown {:.2} | p95 slowdown {:.2}",
+        m.jobs.len(),
+        m.mean_latency_s(),
+        m.mean_slowdown(),
+        crate::util::stats::percentile(&m.slowdowns(), 95.0),
+    );
+    println!(
+        "throughput {:.1} jobs/s (profiled) | hit rate {:.1}% | {} PJRT executions, {} µs mean exec",
+        m.jobs.len() as f64 / (m.span_us as f64 / 1e6),
+        m.cache_hit_rate(),
+        report.pjrt_executions,
+        report.mean_pjrt_exec_us,
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Delay-modeling message fabric for the live coordinator.
+//!
+//! Stands in for Cascade's RDMA/DPDK data plane (§5.1): senders hand a
+//! message plus a delivery delay to the fabric thread, which holds it in a
+//! time-ordered heap and forwards it to the destination worker's channel
+//! when the (scaled) transfer would have completed. Zero-delay messages are
+//! forwarded immediately, preserving sender order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// A message destined for worker `to` after `delay`.
+pub struct Parcel<M> {
+    pub to: usize,
+    pub delay: Duration,
+    pub msg: M,
+}
+
+/// Fabric thread main loop: deliver parcels in deadline order.
+pub fn run_fabric<M: Send + 'static>(
+    rx: Receiver<Parcel<M>>,
+    outs: Vec<Sender<M>>,
+) {
+    struct Pending<M> {
+        at: Instant,
+        seq: u64,
+        to: usize,
+        msg: M,
+    }
+    impl<M> PartialEq for Pending<M> {
+        fn eq(&self, o: &Self) -> bool {
+            self.at == o.at && self.seq == o.seq
+        }
+    }
+    impl<M> Eq for Pending<M> {}
+    impl<M> PartialOrd for Pending<M> {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl<M> Ord for Pending<M> {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.at.cmp(&o.at).then(self.seq.cmp(&o.seq))
+        }
+    }
+
+    let mut heap: BinaryHeap<Reverse<Pending<M>>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    loop {
+        // Wait bounded by the next deadline.
+        let timeout = heap
+            .peek()
+            .map(|Reverse(p)| p.at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(parcel) => {
+                seq += 1;
+                heap.push(Reverse(Pending {
+                    at: Instant::now() + parcel.delay,
+                    seq,
+                    to: parcel.to,
+                    msg: parcel.msg,
+                }));
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain what's left, then exit.
+                while let Some(Reverse(p)) = heap.pop() {
+                    let rem = p.at.saturating_duration_since(Instant::now());
+                    if !rem.is_zero() {
+                        std::thread::sleep(rem);
+                    }
+                    let _ = outs[p.to].send(p.msg);
+                }
+                return;
+            }
+        }
+        // Deliver everything due.
+        while let Some(Reverse(p)) = heap.peek() {
+            if p.at <= Instant::now() {
+                let Reverse(p) = heap.pop().unwrap();
+                let _ = outs[p.to].send(p.msg);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn delivers_in_deadline_order() {
+        let (tx, rx) = channel::<Parcel<u32>>();
+        let (out_tx, out_rx) = channel::<u32>();
+        let h = std::thread::spawn(move || run_fabric(rx, vec![out_tx]));
+        tx.send(Parcel { to: 0, delay: Duration::from_millis(40), msg: 2 }).unwrap();
+        tx.send(Parcel { to: 0, delay: Duration::from_millis(5), msg: 1 }).unwrap();
+        drop(tx);
+        let a = out_rx.recv().unwrap();
+        let b = out_rx.recv().unwrap();
+        h.join().unwrap();
+        assert_eq!((a, b), (1, 2));
+    }
+
+    #[test]
+    fn zero_delay_preserves_order() {
+        let (tx, rx) = channel::<Parcel<u32>>();
+        let (out_tx, out_rx) = channel::<u32>();
+        let h = std::thread::spawn(move || run_fabric(rx, vec![out_tx]));
+        for i in 0..20 {
+            tx.send(Parcel { to: 0, delay: Duration::ZERO, msg: i }).unwrap();
+        }
+        drop(tx);
+        let got: Vec<u32> = (0..20).map(|_| out_rx.recv().unwrap()).collect();
+        h.join().unwrap();
+        assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn routes_to_correct_worker() {
+        let (tx, rx) = channel::<Parcel<&'static str>>();
+        let (t0, r0) = channel();
+        let (t1, r1) = channel();
+        let h = std::thread::spawn(move || run_fabric(rx, vec![t0, t1]));
+        tx.send(Parcel { to: 1, delay: Duration::ZERO, msg: "one" }).unwrap();
+        tx.send(Parcel { to: 0, delay: Duration::ZERO, msg: "zero" }).unwrap();
+        drop(tx);
+        assert_eq!(r1.recv().unwrap(), "one");
+        assert_eq!(r0.recv().unwrap(), "zero");
+        h.join().unwrap();
+    }
+}

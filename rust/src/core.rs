@@ -1,0 +1,64 @@
+//! Shared identifiers and time base for the whole system.
+//!
+//! Simulated and estimated time is `u64` microseconds everywhere (the live
+//! runtime converts to/from `Instant` at its edges), so scheduler estimates
+//! are bit-identical between the simulator and the live coordinator.
+
+/// Index of a worker node in the cluster (0-based, dense).
+pub type WorkerId = usize;
+/// Vertex id within a DFG (0-based, dense per pipeline).
+pub type TaskId = usize;
+/// Globally unique job-instance id.
+pub type JobId = u64;
+/// ML model id — bit position in the SST cache bitmap, so must stay < 64
+/// (the paper's encoding; §5.2).
+pub type ModelId = u8;
+/// Time in microseconds.
+pub type Micros = u64;
+
+pub const MS: Micros = 1_000;
+pub const SEC: Micros = 1_000_000;
+
+pub const GB: u64 = 1_000_000_000;
+pub const MB: u64 = 1_000_000;
+pub const KB: u64 = 1_000;
+
+/// FNV-1a — stable hash for the Hash scheduler baseline and object placement
+/// (std's SipHash is randomly keyed per process; experiments must replay).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Hash an (u64, u64) pair — the common "job id + task id" case.
+#[inline]
+pub fn hash_pair(a: u64, b: u64) -> u64 {
+    let mut buf = [0u8; 16];
+    buf[..8].copy_from_slice(&a.to_le_bytes());
+    buf[8..].copy_from_slice(&b.to_le_bytes());
+    fnv1a(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_stable_known_vector() {
+        // FNV-1a of empty input is the offset basis.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        // And it is deterministic across calls.
+        assert_eq!(fnv1a(b"compass"), fnv1a(b"compass"));
+        assert_ne!(fnv1a(b"compass"), fnv1a(b"compasS"));
+    }
+
+    #[test]
+    fn hash_pair_order_sensitive() {
+        assert_ne!(hash_pair(1, 2), hash_pair(2, 1));
+    }
+}

@@ -1,0 +1,370 @@
+//! Dataflow-graph representation of ML workflows (paper §2.1).
+//!
+//! A `Dfg` is a directed acyclic graph whose vertices are ML computations,
+//! each annotated with the model it depends on (the paper's "diamond box"),
+//! the profiled mean runtime, and output-object size. Edges are precedence
+//! constraints. `compute_ranks` implements the HEFT-style upward ranking of
+//! Eq. 1; `lower_bound_us` is the §6.1 latency lower bound (maximum task
+//! parallelism, zero transfer delay, all models GPU-resident).
+
+pub mod models;
+pub mod parse;
+pub mod pipelines;
+
+use crate::core::{JobId, Micros, ModelId, TaskId, WorkerId};
+use crate::net::CostModel;
+
+/// One ML computation in a workflow.
+#[derive(Debug, Clone)]
+pub struct Vertex {
+    pub id: TaskId,
+    pub name: &'static str,
+    /// Model dependency (None for trivial glue vertices: ingress, join,
+    /// aggregate — these run on the host, no GPU model required).
+    pub model: Option<ModelId>,
+    /// Profiled mean runtime on a reference worker, µs (paper: from the
+    /// Workflow Profiles Repository, covering ≥95% of observed runs).
+    pub mean_runtime_us: Micros,
+    /// Profiled output object size |output_t| in bytes.
+    pub output_bytes: u64,
+}
+
+/// The four pipeline types of Figure 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PipelineKind {
+    /// 1a — multilingual meeting auto-caption (OPT → Marian/mT5×2 → agg).
+    Translation,
+    /// 1b — child-education image captioning (ViT-GPT2 → BART → ESPnet).
+    ImageCaption,
+    /// 1c — virtual personal assistant Q&A (OPT → BART).
+    Vpa,
+    /// 1d — vision-impaired assistance (DETR ∥ GLPN → combine).
+    Perception,
+}
+
+impl PipelineKind {
+    pub const ALL: [PipelineKind; 4] = [
+        PipelineKind::Translation,
+        PipelineKind::ImageCaption,
+        PipelineKind::Vpa,
+        PipelineKind::Perception,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            PipelineKind::Translation => 0,
+            PipelineKind::ImageCaption => 1,
+            PipelineKind::Vpa => 2,
+            PipelineKind::Perception => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineKind::Translation => "translation",
+            PipelineKind::ImageCaption => "image-caption",
+            PipelineKind::Vpa => "vpa-qa",
+            PipelineKind::Perception => "3d-perception",
+        }
+    }
+
+    pub fn from_index(i: usize) -> PipelineKind {
+        PipelineKind::ALL[i]
+    }
+}
+
+/// A workflow DAG plus everything derived statically from it.
+#[derive(Debug, Clone)]
+pub struct Dfg {
+    pub kind: PipelineKind,
+    pub vertices: Vec<Vertex>,
+    pub preds: Vec<Vec<TaskId>>,
+    pub succs: Vec<Vec<TaskId>>,
+    pub entry: TaskId,
+    pub exit: TaskId,
+    /// Upward ranks (Eq. 1), µs — computed once at load (paper §4.2.1).
+    pub ranks: Vec<f64>,
+    /// Task ids in descending-rank order, cached at load (planning runs on
+    /// the request path once per job; re-sorting there is wasted work).
+    rank_order: Vec<TaskId>,
+    /// §6.1 latency lower bound, µs.
+    pub lower_bound_us: Micros,
+}
+
+impl Dfg {
+    /// Build a DFG from vertices and edges, computing static ranks with the
+    /// given cost model (Eq. 1 uses TD_output in ranking).
+    pub fn new(
+        kind: PipelineKind,
+        vertices: Vec<Vertex>,
+        edges: &[(TaskId, TaskId)],
+        cost: &CostModel,
+    ) -> Dfg {
+        let n = vertices.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            assert!(a < n && b < n && a != b, "bad edge ({a},{b})");
+            succs[a].push(b);
+            preds[b].push(a);
+        }
+        let entry = (0..n)
+            .find(|&v| preds[v].is_empty())
+            .expect("DFG must have an entry vertex");
+        let exit = (0..n)
+            .find(|&v| succs[v].is_empty())
+            .expect("DFG must have an exit vertex");
+        assert_eq!(
+            (0..n).filter(|&v| preds[v].is_empty()).count(),
+            1,
+            "single entry required"
+        );
+        assert_eq!(
+            (0..n).filter(|&v| succs[v].is_empty()).count(),
+            1,
+            "single exit required"
+        );
+
+        let mut dfg = Dfg {
+            kind,
+            vertices,
+            preds,
+            succs,
+            entry,
+            exit,
+            ranks: Vec::new(),
+            rank_order: Vec::new(),
+            lower_bound_us: 0,
+        };
+        dfg.assert_acyclic();
+        dfg.ranks = dfg.compute_ranks(cost);
+        dfg.rank_order = dfg.compute_rank_order();
+        dfg.lower_bound_us = dfg.critical_path_us();
+        dfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+
+    /// A join task has >1 predecessor; it cannot be dynamically re-placed
+    /// (Algorithm 2, line 3) because its predecessors coordinated on it.
+    pub fn is_join(&self, t: TaskId) -> bool {
+        self.preds[t].len() > 1
+    }
+
+    fn assert_acyclic(&self) {
+        // Kahn's algorithm; panics if edges form a cycle.
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|v| self.preds[v].len()).collect();
+        let mut stack: Vec<TaskId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut seen = 0;
+        while let Some(v) = stack.pop() {
+            seen += 1;
+            for &s in &self.succs[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    stack.push(s);
+                }
+            }
+        }
+        assert_eq!(seen, n, "DFG contains a cycle");
+    }
+
+    /// Topological order (entry first).
+    pub fn topo_order(&self) -> Vec<TaskId> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|v| self.preds[v].len()).collect();
+        let mut stack: Vec<TaskId> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &s in &self.succs[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    stack.push(s);
+                }
+            }
+        }
+        order
+    }
+
+    /// Eq. 1: rank(t) = R(t) + max_{t≺t'} (TD_output(t) + rank(t')).
+    /// R(t) here is the reference mean (workers unknown at rank time).
+    fn compute_ranks(&self, cost: &CostModel) -> Vec<f64> {
+        let mut ranks = vec![0.0f64; self.len()];
+        let order = self.topo_order();
+        for &t in order.iter().rev() {
+            let td_out = cost.td_transfer(self.vertices[t].output_bytes) as f64;
+            let tail = self.succs[t]
+                .iter()
+                .map(|&s| td_out + ranks[s])
+                .fold(0.0f64, f64::max);
+            ranks[t] = self.vertices[t].mean_runtime_us as f64 + tail;
+        }
+        ranks
+    }
+
+    /// Critical path by runtime only — zero transfer, all models cached:
+    /// the §6.1 lower bound for the slowdown factor.
+    fn critical_path_us(&self) -> Micros {
+        let mut lb = vec![0u64; self.len()];
+        let order = self.topo_order();
+        for &t in order.iter().rev() {
+            let tail = self.succs[t].iter().map(|&s| lb[s]).max().unwrap_or(0);
+            lb[t] = self.vertices[t].mean_runtime_us + tail;
+        }
+        lb[self.entry]
+    }
+
+    /// Task ids in descending-rank order (planning order, §4.2.2); ties
+    /// break by id (paper: by arrival — ids encode DFG order). Cached.
+    pub fn rank_order(&self) -> &[TaskId] {
+        &self.rank_order
+    }
+
+    fn compute_rank_order(&self) -> Vec<TaskId> {
+        let mut ids: Vec<TaskId> = (0..self.len()).collect();
+        ids.sort_by(|&a, &b| {
+            self.ranks[b]
+                .partial_cmp(&self.ranks[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        ids
+    }
+
+    /// Total |input_t| in bytes for a task: sum of predecessor outputs
+    /// (entry tasks consume the client input, accounted separately).
+    pub fn input_bytes(&self, t: TaskId) -> u64 {
+        self.preds[t]
+            .iter()
+            .map(|&p| self.vertices[p].output_bytes)
+            .sum()
+    }
+}
+
+/// One triggered job instance (a request flowing through one DFG).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub kind: PipelineKind,
+    /// Arrival (generation) time at the cluster, µs.
+    pub arrival_us: Micros,
+    /// Client input object size in bytes (GLUE text / COCO image sample).
+    pub input_bytes: u64,
+}
+
+/// Activated DFG: the per-job worker-assignment map (paper §3).
+/// Piggybacked task-to-task as the job executes; entries start as the
+/// planning phase's choices and may be rewritten by dynamic adjustment.
+#[derive(Debug, Clone)]
+pub struct Adfg {
+    pub assignment: Vec<Option<WorkerId>>,
+}
+
+impl Adfg {
+    pub fn unassigned(n: usize) -> Adfg {
+        Adfg { assignment: vec![None; n] }
+    }
+
+    pub fn get(&self, t: TaskId) -> Option<WorkerId> {
+        self.assignment[t]
+    }
+
+    pub fn set(&mut self, t: TaskId, w: WorkerId) {
+        self.assignment[t] = Some(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{KB, MS};
+
+    fn diamond() -> Dfg {
+        // 0 -> {1, 2} -> 3
+        let v = |id, rt: Micros, out| Vertex {
+            id,
+            name: "t",
+            model: None,
+            mean_runtime_us: rt,
+            output_bytes: out,
+        };
+        Dfg::new(
+            PipelineKind::Perception,
+            vec![v(0, 10 * MS, KB), v(1, 300 * MS, KB), v(2, 350 * MS, KB), v(3, 30 * MS, KB)],
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            &CostModel::default(),
+        )
+    }
+
+    #[test]
+    fn entry_exit_detected() {
+        let d = diamond();
+        assert_eq!(d.entry, 0);
+        assert_eq!(d.exit, 3);
+        assert!(d.is_join(3));
+        assert!(!d.is_join(1));
+    }
+
+    #[test]
+    fn ranks_decrease_along_edges() {
+        let d = diamond();
+        for t in 0..d.len() {
+            for &s in &d.succs[t] {
+                assert!(d.ranks[t] > d.ranks[s], "rank({t}) !> rank({s})");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_order_starts_at_entry() {
+        let d = diamond();
+        assert_eq!(d.rank_order()[0], d.entry);
+        assert_eq!(*d.rank_order().last().unwrap(), d.exit);
+    }
+
+    #[test]
+    fn lower_bound_is_critical_path() {
+        let d = diamond();
+        // 10 + max(300, 350) + 30 = 390 ms.
+        assert_eq!(d.lower_bound_us, 390 * MS);
+    }
+
+    #[test]
+    fn input_bytes_sums_pred_outputs() {
+        let d = diamond();
+        assert_eq!(d.input_bytes(3), 2 * KB);
+        assert_eq!(d.input_bytes(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_rejected() {
+        let v = |id| Vertex { id, name: "t", model: None, mean_runtime_us: 1, output_bytes: 0 };
+        // 1 -> 2 -> 1 cycle behind entry 0 and exit 3.
+        Dfg::new(
+            PipelineKind::Vpa,
+            vec![v(0), v(1), v(2), v(3)],
+            &[(0, 1), (1, 2), (2, 1), (2, 3)],
+            &CostModel::default(),
+        );
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let d = diamond();
+        let order = d.topo_order();
+        let pos: Vec<usize> = (0..d.len()).map(|t| order.iter().position(|&x| x == t).unwrap()).collect();
+        for t in 0..d.len() {
+            for &s in &d.succs[t] {
+                assert!(pos[t] < pos[s]);
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The model table: the eight ML models used by the paper's four pipelines
+//! (Figure 1), with their *profiled* sizes.
+//!
+//! Sizes follow the paper's §2.2: each model is several GB and the set
+//! aggregates to ~35 GB — more than double a 16 GB GPU. `artifact` names the
+//! AOT-compiled tiny-transformer HLO that the live runtime executes for
+//! vertices bound to this model (see python/compile/model.py; the scheduler
+//! itself only ever consumes the profiled numbers here).
+
+use crate::core::{ModelId, GB};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub id: ModelId,
+    pub name: &'static str,
+    /// Profiled (paper-scale) GPU memory footprint of the decompressed model.
+    pub mem_bytes: u64,
+    /// AOT artifact base name under artifacts/ (`<artifact>.hlo.txt`).
+    pub artifact: &'static str,
+}
+
+/// ids must match python/compile/model.py MODEL_SPECS.
+pub const MODELS: [ModelInfo; 8] = [
+    ModelInfo { id: 0, name: "opt-1.3b", mem_bytes: 6 * GB, artifact: "opt" },
+    ModelInfo { id: 1, name: "marian", mem_bytes: 3 * GB, artifact: "marian" },
+    ModelInfo { id: 2, name: "mt5", mem_bytes: 5 * GB, artifact: "mt5" },
+    ModelInfo { id: 3, name: "vit-gpt2", mem_bytes: 4 * GB, artifact: "vit_gpt2" },
+    ModelInfo { id: 4, name: "espnet", mem_bytes: 3 * GB, artifact: "espnet" },
+    ModelInfo { id: 5, name: "bart", mem_bytes: 5 * GB, artifact: "bart" },
+    ModelInfo { id: 6, name: "detr", mem_bytes: 4 * GB, artifact: "detr" },
+    ModelInfo { id: 7, name: "glpn-depth", mem_bytes: 5 * GB, artifact: "glpn" },
+];
+
+pub const OPT: ModelId = 0;
+pub const MARIAN: ModelId = 1;
+pub const MT5: ModelId = 2;
+pub const VIT_GPT2: ModelId = 3;
+pub const ESPNET: ModelId = 4;
+pub const BART: ModelId = 5;
+pub const DETR: ModelId = 6;
+pub const GLPN: ModelId = 7;
+
+#[inline]
+pub fn model(id: ModelId) -> &'static ModelInfo {
+    &MODELS[id as usize]
+}
+
+#[inline]
+pub fn model_bytes(id: ModelId) -> u64 {
+    MODELS[id as usize].mem_bytes
+}
+
+/// Mean model size — used for the scheduler's eviction-penalty estimate.
+pub fn mean_model_bytes() -> u64 {
+    MODELS.iter().map(|m| m.mem_bytes).sum::<u64>() / MODELS.len() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_dense_and_ordered() {
+        for (i, m) in MODELS.iter().enumerate() {
+            assert_eq!(m.id as usize, i);
+        }
+    }
+
+    #[test]
+    fn aggregate_is_paper_scale() {
+        // §2.2: "total memory aggregated over the full set of DFGs is nearly
+        // 35GB, which already exceeds what a single standard cloud GPU holds".
+        let total: u64 = MODELS.iter().map(|m| m.mem_bytes).sum();
+        assert_eq!(total, 35 * GB);
+        assert!(MODELS.iter().all(|m| m.mem_bytes > 16 * GB / 8));
+    }
+
+    #[test]
+    fn all_fit_bitmap_id_space() {
+        // §5.2: 64-bit bitmap encoding limits active models to ids 0..63.
+        assert!(MODELS.iter().all(|m| m.id < 64));
+    }
+}

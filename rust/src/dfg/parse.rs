@@ -1,0 +1,235 @@
+//! Text format for user-defined workflows.
+//!
+//! Downstream users are not limited to the four Figure-1 pipelines: a DFG
+//! can be described in a small line-oriented format and scheduled like any
+//! built-in workflow.
+//!
+//! ```text
+//! # my-pipeline.dfg
+//! pipeline my-pipeline          # header (name; kind slot is assigned)
+//! task detect   model=detr   runtime_ms=300 output_kb=50
+//! task caption  model=vit-gpt2 runtime_ms=250 output_kb=2
+//! task fuse     runtime_ms=20 output_kb=4    # no model => host glue
+//! edge detect -> fuse
+//! edge caption -> fuse
+//! ```
+//!
+//! Tasks without an incoming edge hang off an implicit entry; the format
+//! requires exactly one entry and one exit (as the core `Dfg` does).
+
+use super::models::MODELS;
+use super::{Dfg, PipelineKind, Vertex};
+use crate::core::{Micros, KB, MS};
+use crate::net::CostModel;
+use anyhow::{anyhow, bail, Result};
+
+/// Parse a `.dfg` document into a `Dfg`. `kind` assigns the pipeline slot
+/// (user DFGs typically reuse one of the four kind slots for metrics).
+pub fn parse_dfg(src: &str, kind: PipelineKind, cost: &CostModel) -> Result<Dfg> {
+    let mut names: Vec<String> = Vec::new();
+    let mut vertices: Vec<Vertex> = Vec::new();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut pipeline_name = None;
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("pipeline") => {
+                pipeline_name =
+                    Some(parts.next().ok_or_else(|| anyhow!("line {}: pipeline needs a name", lineno + 1))?.to_string());
+            }
+            Some("task") => {
+                let name = parts
+                    .next()
+                    .ok_or_else(|| anyhow!("line {}: task needs a name", lineno + 1))?
+                    .to_string();
+                if names.contains(&name) {
+                    bail!("line {}: duplicate task '{name}'", lineno + 1);
+                }
+                let mut model = None;
+                let mut runtime: Micros = 100 * MS;
+                let mut output: u64 = KB;
+                for kv in parts {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| anyhow!("line {}: expected key=value, got '{kv}'", lineno + 1))?;
+                    match k {
+                        "model" => {
+                            let m = MODELS
+                                .iter()
+                                .find(|m| m.name == v || m.artifact == v)
+                                .ok_or_else(|| anyhow!("line {}: unknown model '{v}'", lineno + 1))?;
+                            model = Some(m.id);
+                        }
+                        "runtime_ms" => runtime = v.parse::<u64>()? * MS,
+                        "output_kb" => output = v.parse::<u64>()? * KB,
+                        other => bail!("line {}: unknown attribute '{other}'", lineno + 1),
+                    }
+                }
+                let id = vertices.len();
+                names.push(name);
+                vertices.push(Vertex {
+                    id,
+                    // Vertex names are &'static str for the built-ins;
+                    // user tasks get leaked once per parse (DFGs are small,
+                    // static, loaded once — paper §2.2).
+                    name: Box::leak(names.last().unwrap().clone().into_boxed_str()),
+                    model,
+                    mean_runtime_us: runtime,
+                    output_bytes: output,
+                });
+            }
+            Some("edge") => {
+                let from = parts.next().ok_or_else(|| anyhow!("line {}: edge needs 'a -> b'", lineno + 1))?;
+                let arrow = parts.next();
+                let to = parts.next();
+                if arrow != Some("->") || to.is_none() {
+                    bail!("line {}: edge syntax is 'edge a -> b'", lineno + 1);
+                }
+                let fi = names
+                    .iter()
+                    .position(|n| n == from)
+                    .ok_or_else(|| anyhow!("line {}: unknown task '{from}'", lineno + 1))?;
+                let ti = names
+                    .iter()
+                    .position(|n| n == to.unwrap())
+                    .ok_or_else(|| anyhow!("line {}: unknown task '{}'", lineno + 1, to.unwrap()))?;
+                edges.push((fi, ti));
+            }
+            Some(other) => bail!("line {}: unknown directive '{other}'", lineno + 1),
+            None => unreachable!(),
+        }
+    }
+
+    if pipeline_name.is_none() {
+        bail!("missing 'pipeline <name>' header");
+    }
+    if vertices.is_empty() {
+        bail!("no tasks defined");
+    }
+    // Dfg::new validates single entry/exit and acyclicity.
+    let n = vertices.len();
+    let has_pred: Vec<bool> = (0..n).map(|v| edges.iter().any(|&(_, b)| b == v)).collect();
+    let has_succ: Vec<bool> = (0..n).map(|v| edges.iter().any(|&(a, _)| a == v)).collect();
+    if (0..n).filter(|&v| !has_pred[v]).count() != 1 {
+        bail!("exactly one entry task required");
+    }
+    if (0..n).filter(|&v| !has_succ[v]).count() != 1 {
+        bail!("exactly one exit task required");
+    }
+    Ok(Dfg::new(kind, vertices, &edges, cost))
+}
+
+/// Parse from a file path.
+pub fn parse_dfg_file(
+    path: &std::path::Path,
+    kind: PipelineKind,
+    cost: &CostModel,
+) -> Result<Dfg> {
+    parse_dfg(&std::fs::read_to_string(path)?, kind, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = "\
+# demo
+pipeline demo
+task detect  model=detr runtime_ms=300 output_kb=50
+task depth   model=glpn-depth runtime_ms=350 output_kb=1000
+task ingress runtime_ms=10 output_kb=300
+task fuse    runtime_ms=30 output_kb=100
+edge ingress -> detect
+edge ingress -> depth
+edge detect -> fuse
+edge depth -> fuse
+";
+
+    #[test]
+    fn parses_perception_like_pipeline() {
+        let d = parse_dfg(DOC, PipelineKind::Perception, &CostModel::default()).unwrap();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.vertices[0].name, "detect");
+        assert_eq!(d.vertices[0].model, Some(super::super::models::DETR));
+        assert!(d.is_join(3));
+        assert_eq!(d.entry, 2);
+        assert_eq!(d.exit, 3);
+        assert_eq!(d.lower_bound_us, (10 + 350 + 30) * MS);
+    }
+
+    #[test]
+    fn parsed_dfg_is_schedulable() {
+        use crate::config::ClusterConfig;
+        use crate::sched::{self, ClusterView};
+        use crate::sst::SstRow;
+        let d = parse_dfg(DOC, PipelineKind::Perception, &CostModel::default()).unwrap();
+        let cfg = ClusterConfig::default();
+        let sched = sched::build(&cfg);
+        let cost = CostModel::default();
+        let rows = vec![SstRow::default(); 5];
+        let speed = vec![1.0; 5];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = crate::dfg::Job {
+            id: 1,
+            kind: PipelineKind::Perception,
+            arrival_us: 0,
+            input_bytes: 1000,
+        };
+        let adfg = sched.plan(&job, &d, &view);
+        assert!(adfg.assignment.iter().all(|a| a.is_some()));
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let err = parse_dfg(
+            "pipeline x\ntask a model=nope runtime_ms=1\n",
+            PipelineKind::Vpa,
+            &CostModel::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
+    }
+
+    #[test]
+    fn rejects_bad_edges_and_cycles() {
+        assert!(parse_dfg(
+            "pipeline x\ntask a\ntask b\nedge a -> c\n",
+            PipelineKind::Vpa,
+            &CostModel::default()
+        )
+        .is_err());
+        assert!(parse_dfg(
+            "pipeline x\ntask a\ntask b\nedge a b\n",
+            PipelineKind::Vpa,
+            &CostModel::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_multi_entry() {
+        let err = parse_dfg(
+            "pipeline x\ntask a\ntask b\ntask c\nedge a -> c\nedge b -> c\n",
+            PipelineKind::Vpa,
+            &CostModel::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("one entry"), "{err}");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let d = parse_dfg(
+            "# hi\n\npipeline x  # trailing\ntask only runtime_ms=5\n",
+            PipelineKind::Vpa,
+            &CostModel::default(),
+        )
+        .unwrap();
+        assert_eq!(d.len(), 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Figure 10 — scalability simulation (§6.5).
+//!
+//! Poisson workload at 40 req/s over clusters of 5..250 workers, Compass vs
+//! Hash. Shape to reproduce: Hash's median slow-down falls toward its floor
+//! only around ~100 workers and it keeps *every* worker active; Compass
+//! reaches the floor with roughly *half* the workers and leaves the rest
+//! completely idle (the paper's headline resource-efficiency claim).
+
+use super::Scale;
+use crate::config::{ClusterConfig, SchedulerKind};
+use crate::util::table;
+use crate::workload;
+use crate::Simulator;
+
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub workers: usize,
+    pub median_slowdown: f64,
+    pub active_workers: usize,
+}
+
+pub struct ScalabilityResult {
+    pub compass: Vec<ScalePoint>,
+    pub hash: Vec<ScalePoint>,
+}
+
+impl ScalabilityResult {
+    /// Smallest cluster size whose median slow-down is within 10% of that
+    /// scheduler's floor (its minimum across the sweep).
+    pub fn floor_reach(points: &[ScalePoint]) -> usize {
+        let floor =
+            points.iter().map(|p| p.median_slowdown).fold(f64::INFINITY, f64::min);
+        points
+            .iter()
+            .find(|p| p.median_slowdown <= floor * 1.10)
+            .map(|p| p.workers)
+            .unwrap_or(points.last().unwrap().workers)
+    }
+}
+
+pub fn compute(scale: Scale, quick: bool) -> ScalabilityResult {
+    let sizes: Vec<usize> =
+        if quick { vec![10, 25, 50, 100] } else { vec![5, 10, 25, 50, 75, 100, 150, 200, 250] };
+    let n_jobs = if quick { 800 } else { 2000 };
+    let jobs = workload::poisson(40.0, n_jobs, &[], scale.seed ^ 0xf16);
+
+    let sweep = |kind: SchedulerKind| -> Vec<ScalePoint> {
+        sizes
+            .iter()
+            .map(|&w| {
+                let cfg =
+                    ClusterConfig::default().with_scheduler(kind).with_workers(w).with_seed(scale.seed);
+                let m = Simulator::simulate(cfg, jobs.clone()).metrics;
+                ScalePoint {
+                    workers: w,
+                    median_slowdown: m.median_slowdown(),
+                    active_workers: m.active_workers(),
+                }
+            })
+            .collect()
+    };
+    ScalabilityResult { compass: sweep(SchedulerKind::Compass), hash: sweep(SchedulerKind::Hash) }
+}
+
+pub fn run(scale: Scale, quick: bool) -> ScalabilityResult {
+    let r = compute(scale, quick);
+    println!("\n=== Figure 10 — scalability at 40 req/s (simulation) ===\n");
+    let body: Vec<Vec<String>> = r
+        .compass
+        .iter()
+        .zip(&r.hash)
+        .map(|(c, h)| {
+            vec![
+                format!("{}", c.workers),
+                format!("{:.2}", c.median_slowdown),
+                format!("{}", c.active_workers),
+                format!("{:.2}", h.median_slowdown),
+                format!("{}", h.active_workers),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        table::render(
+            &["workers", "compass med-slowdown", "compass active", "hash med-slowdown", "hash active"],
+            &body
+        )
+    );
+    let cr = ScalabilityResult::floor_reach(&r.compass);
+    let hr = ScalabilityResult::floor_reach(&r.hash);
+    println!(
+        "\ncompass reaches its slow-down floor at {cr} workers; hash at {hr} \
+         (paper: Navigator needs ~half the workers Hash does)"
+    );
+    r
+}

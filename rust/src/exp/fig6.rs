@@ -1,0 +1,123 @@
+//! Figure 6 — scheduler comparison.
+//!
+//! 6a/6b: per-pipeline slow-down-factor box plots under steady low
+//! (0.5 req/s) and high (2 req/s) Poisson load, for Compass vs JIT vs HEFT
+//! vs Hash. 6c: mean slow-down vs request rate. The paper's shape to
+//! reproduce: everyone is near-optimal at low load with Compass closest to
+//! 1.0; at high load Compass wins clearly, JIT second, HEFT worst; the
+//! short pipelines (image caption, 3D perception) blow up the most for the
+//! losing schedulers.
+
+use super::{run_scenario, Scale};
+use crate::config::SchedulerKind;
+use crate::dfg::PipelineKind;
+use crate::util::stats::BoxStats;
+use crate::util::table;
+
+/// Structured result: per (scheduler, pipeline) box stats.
+pub struct BoxesResult {
+    pub rate: f64,
+    pub per_sched: Vec<(SchedulerKind, Vec<(PipelineKind, BoxStats)>)>,
+}
+
+impl BoxesResult {
+    pub fn stats(&self, s: SchedulerKind, k: PipelineKind) -> &BoxStats {
+        &self
+            .per_sched
+            .iter()
+            .find(|(x, _)| *x == s)
+            .unwrap()
+            .1
+            .iter()
+            .find(|(x, _)| *x == k)
+            .unwrap()
+            .1
+    }
+
+    pub fn median_overall(&self, s: SchedulerKind) -> f64 {
+        let v: Vec<f64> = self
+            .per_sched
+            .iter()
+            .find(|(x, _)| *x == s)
+            .unwrap()
+            .1
+            .iter()
+            .map(|(_, b)| b.median)
+            .collect();
+        crate::util::stats::mean(&v)
+    }
+}
+
+pub fn boxes(rate: f64, scale: Scale, title: &str) -> BoxesResult {
+    let mut per_sched = Vec::new();
+    for s in SchedulerKind::ALL {
+        let m = run_scenario(s, rate, scale, |_| {});
+        let per_kind: Vec<(PipelineKind, BoxStats)> = PipelineKind::ALL
+            .iter()
+            .filter_map(|&k| m.box_stats(k).map(|b| (k, b)))
+            .collect();
+        per_sched.push((s, per_kind));
+    }
+
+    println!("\n=== {title} ===");
+    println!("slow_down_factor distribution per job category (box plot stats)\n");
+    let mut rows = Vec::new();
+    for (s, per_kind) in &per_sched {
+        for (k, b) in per_kind {
+            rows.push(vec![
+                s.name().to_string(),
+                k.name().to_string(),
+                format!("{:.2}", b.q1),
+                format!("{:.2}", b.median),
+                format!("{:.2}", b.q3),
+                format!("{:.2}", b.whisker_hi),
+                format!("{}", b.outliers),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        table::render(&["scheduler", "pipeline", "q1", "median", "q3", "whisker-hi", "outliers"], &rows)
+    );
+    BoxesResult { rate, per_sched }
+}
+
+/// Figure 6c — mean slow-down factor vs request rate, mixed workload.
+pub struct RateSweepResult {
+    pub rates: Vec<f64>,
+    /// means[scheduler_index][rate_index]
+    pub means: Vec<Vec<f64>>,
+}
+
+impl RateSweepResult {
+    pub fn mean(&self, s: SchedulerKind, rate_idx: usize) -> f64 {
+        let si = SchedulerKind::ALL.iter().position(|&x| x == s).unwrap();
+        self.means[si][rate_idx]
+    }
+}
+
+pub fn rate_sweep(scale: Scale) -> RateSweepResult {
+    let rates = vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0];
+    let mut means = Vec::new();
+    for s in SchedulerKind::ALL {
+        let mut row = Vec::new();
+        for &r in &rates {
+            let m = run_scenario(s, r, scale, |_| {});
+            row.push(m.mean_slowdown());
+        }
+        means.push(row);
+    }
+
+    println!("\n=== Figure 6c — mean slow-down factor vs request rate ===\n");
+    let mut rows = Vec::new();
+    for (si, s) in SchedulerKind::ALL.iter().enumerate() {
+        let mut row = vec![s.name().to_string()];
+        row.extend(means[si].iter().map(|m| format!("{m:.2}")));
+        rows.push(row);
+    }
+    let mut headers: Vec<String> = vec!["scheduler".into()];
+    headers.extend(rates.iter().map(|r| format!("{r} req/s")));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    print!("{}", table::render(&hdr_refs, &rows));
+    RateSweepResult { rates, means }
+}

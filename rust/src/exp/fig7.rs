@@ -1,0 +1,66 @@
+//! Figure 7 — ablation analysis (§6.3.1): selectively disable each Compass
+//! feature and measure the damage at low/medium/high request rates.
+//!
+//! Shape to reproduce: dynamic adjustment and model locality each matter a
+//! lot (paper: 8× degradation without locality, hit rate 99% → ~90%);
+//! queue-lookahead eviction beats FIFO at high rate but is a wash at low
+//! rate.
+
+use super::{run_scenario, Scale};
+use crate::config::SchedulerKind;
+use crate::gpu::EvictionPolicy;
+use crate::util::table;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub variant: &'static str,
+    /// Mean slow-down at each swept rate.
+    pub means: Vec<f64>,
+    /// Cache hit rate (%) at the highest rate.
+    pub hit_rate_pct: f64,
+}
+
+pub const RATES: [f64; 3] = [0.5, 1.5, 2.5];
+
+pub fn compute(scale: Scale) -> Vec<AblationRow> {
+    type Mutator = fn(&mut crate::config::ClusterConfig);
+    let variants: Vec<(&'static str, Mutator)> = vec![
+        ("compass-full", |_| {}),
+        ("no-dynamic-adjust", |c| c.compass.dynamic_adjust = false),
+        ("fifo-eviction", |c| c.eviction = EvictionPolicy::Fifo),
+        ("no-model-locality", |c| c.compass.model_locality = false),
+    ];
+    variants
+        .into_iter()
+        .map(|(name, mutate)| {
+            let mut means = Vec::new();
+            let mut hit = 0.0;
+            for &r in &RATES {
+                let m = run_scenario(SchedulerKind::Compass, r, scale, mutate);
+                means.push(m.mean_slowdown());
+                hit = m.cache_hit_rate();
+            }
+            AblationRow { variant: name, means, hit_rate_pct: hit }
+        })
+        .collect()
+}
+
+pub fn run(scale: Scale) -> Vec<AblationRow> {
+    let rows = compute(scale);
+    println!("\n=== Figure 7 — ablation analysis (mean slow-down factor) ===\n");
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut v = vec![r.variant.to_string()];
+            v.extend(r.means.iter().map(|m| format!("{m:.2}")));
+            v.push(format!("{:.1}", r.hit_rate_pct));
+            v
+        })
+        .collect();
+    let mut headers: Vec<String> = vec!["variant".into()];
+    headers.extend(RATES.iter().map(|r| format!("{r} req/s")));
+    headers.push("hit rate % @hi".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    print!("{}", table::render(&hdr, &body));
+    rows
+}

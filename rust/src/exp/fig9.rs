@@ -1,0 +1,86 @@
+//! Figure 9 — production-trace replay (§6.4).
+//!
+//! The paper replays an Alibaba production-GPU-cluster trace rescaled to
+//! its 5-worker testbed. We substitute a synthesized trace with the same
+//! burst structure (see `workload::alibaba_like` and DESIGN.md §3) and
+//! replay it under all four schedulers. Shape to reproduce: Hash is least
+//! burst-tolerant; Compass keeps the best completion times through the
+//! bursts.
+
+use super::Scale;
+use crate::config::{ClusterConfig, SchedulerKind};
+use crate::util::stats::percentile;
+use crate::util::table;
+use crate::workload;
+use crate::Simulator;
+
+#[derive(Debug, Clone)]
+pub struct TraceRow {
+    pub scheduler: SchedulerKind,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+    pub mean_slowdown: f64,
+}
+
+pub struct TraceResult {
+    pub rows: Vec<TraceRow>,
+    pub bucket_rates: Vec<f64>,
+}
+
+pub fn compute(scale: Scale) -> TraceResult {
+    let duration_s = (scale.jobs as f64 / 2.0).max(60.0);
+    let (jobs, buckets) = workload::alibaba_like(2.0, duration_s, scale.seed ^ 0xa11b);
+    let rows = SchedulerKind::ALL
+        .iter()
+        .map(|&s| {
+            let cfg = ClusterConfig::default().with_scheduler(s).with_seed(scale.seed);
+            let m = Simulator::simulate(cfg, jobs.clone()).metrics;
+            let lats: Vec<f64> =
+                m.jobs.iter().map(|j| j.latency_us() as f64 / 1e6).collect();
+            TraceRow {
+                scheduler: s,
+                p50_s: percentile(&lats, 50.0),
+                p95_s: percentile(&lats, 95.0),
+                max_s: percentile(&lats, 100.0),
+                mean_slowdown: m.mean_slowdown(),
+            }
+        })
+        .collect();
+    TraceResult { rows, bucket_rates: buckets.iter().map(|b| b.rate_per_s).collect() }
+}
+
+pub fn run(scale: Scale) -> TraceResult {
+    let r = compute(scale);
+    println!("\n=== Figure 9 — production-trace replay (bursty arrivals) ===");
+    let peak = r.bucket_rates.iter().cloned().fold(0.0, f64::max);
+    let mean = r.bucket_rates.iter().sum::<f64>() / r.bucket_rates.len() as f64;
+    println!(
+        "trace: {} buckets, mean {:.1} req/s, peak {:.1} req/s (burst factor {:.1}x)\n",
+        r.bucket_rates.len(),
+        mean,
+        peak,
+        peak / mean
+    );
+    let body: Vec<Vec<String>> = r
+        .rows
+        .iter()
+        .map(|row| {
+            vec![
+                row.scheduler.name().to_string(),
+                format!("{:.2}", row.p50_s),
+                format!("{:.2}", row.p95_s),
+                format!("{:.2}", row.max_s),
+                format!("{:.2}", row.mean_slowdown),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        table::render(
+            &["scheduler", "p50 latency (s)", "p95 latency (s)", "max (s)", "mean slowdown"],
+            &body
+        )
+    );
+    r
+}

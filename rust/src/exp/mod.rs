@@ -1,0 +1,121 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§6). Each submodule prints the same rows/series the paper
+//! reports and returns structured results the benches and tests consume.
+//!
+//! | module   | paper artifact                                      |
+//! |----------|-----------------------------------------------------|
+//! | fig6     | Fig. 6a/6b (slowdown box plots), Fig. 6c (rate sweep)|
+//! | table1   | Table 1 (latency / GPU metrics per scheduler)        |
+//! | fig7     | Fig. 7 (ablation analysis)                           |
+//! | fig8     | Fig. 8 (SST staleness sensitivity heatmap)           |
+//! | fig9     | Fig. 9 (production-trace replay)                     |
+//! | fig10    | Fig. 10 (scalability: Compass vs Hash, 5..250 workers)|
+//! | validate | §5.4 simulator-vs-live validation                    |
+
+pub mod fig10;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+pub mod validate;
+
+use crate::config::{ClusterConfig, SchedulerKind};
+use crate::metrics::MetricsSink;
+use crate::util::args::Args;
+use crate::workload;
+use crate::Simulator;
+
+/// Scale knobs shared by all experiments. `--quick` shrinks workloads for
+/// CI/bench runs; full size matches the statistical weight of the paper.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub jobs: usize,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn from_args(args: &Args) -> Scale {
+        let quick = args.flag("quick");
+        Scale {
+            jobs: args.get_usize("jobs", if quick { 150 } else { 600 }),
+            seed: args.get_u64("seed", 42),
+        }
+    }
+
+    pub fn quick() -> Scale {
+        Scale { jobs: 150, seed: 42 }
+    }
+}
+
+/// Run one simulator scenario: `scheduler` at `rate` req/s over the
+/// standard 4-pipeline mix.
+pub fn run_scenario(
+    scheduler: SchedulerKind,
+    rate: f64,
+    scale: Scale,
+    mutate: impl FnOnce(&mut ClusterConfig),
+) -> MetricsSink {
+    let mut cfg = ClusterConfig::default().with_scheduler(scheduler).with_seed(scale.seed);
+    mutate(&mut cfg);
+    // Workload seed is shared across schedulers: identical request streams.
+    let jobs = workload::poisson(rate, scale.jobs, &[], scale.seed ^ 0x9e37_79b9);
+    Simulator::simulate(cfg, jobs).metrics
+}
+
+/// CLI dispatch for `compass experiment <which>`.
+pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
+    let scale = Scale::from_args(args);
+    match which {
+        "fig6a" => {
+            fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)");
+        }
+        "fig6b" => {
+            fig6::boxes(2.0, scale, "Figure 6b — high load (2 req/s)");
+        }
+        "fig6c" => {
+            fig6::rate_sweep(scale);
+        }
+        "table1" => {
+            table1::run(scale);
+        }
+        "fig7" => {
+            fig7::run(scale);
+        }
+        "fig8" => {
+            fig8::run(scale);
+        }
+        "fig9" => {
+            fig9::run(scale);
+        }
+        "fig10" => {
+            fig10::run(scale, args.flag("quick"));
+        }
+        "all" => {
+            fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)");
+            fig6::boxes(2.0, scale, "Figure 6b — high load (2 req/s)");
+            fig6::rate_sweep(scale);
+            table1::run(scale);
+            fig7::run(scale);
+            fig8::run(scale);
+            fig9::run(scale);
+            fig10::run(scale, args.flag("quick"));
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+/// `compass validate` CLI (§5.4 sim-vs-live comparison).
+pub fn validate_cli(args: &Args) -> anyhow::Result<()> {
+    let n_jobs = args.get_usize("jobs", 40);
+    let artifacts = args.get("artifacts").map(std::path::PathBuf::from);
+    let r = validate::run(n_jobs, args.get_u64("seed", 42), artifacts)?;
+    println!("{}", r.render());
+    if r.within_tolerance(0.15) {
+        println!("VALIDATION OK: sim and live medians within 15%");
+    } else {
+        println!("VALIDATION DIVERGED (>{:.0}%)", 15.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Table 1 — scheduler performance metrics under the Fig. 6b scenario
+//! (2 req/s): mean latency, GPU utilization, GPU memory utilization, GPU
+//! energy, GPU cache hit rate.
+//!
+//! Shape to reproduce: all schedulers consume similar GPU resources and
+//! energy, but Compass's latency is lowest by a wide margin and its cache
+//! hit rate is the highest (paper: 99% vs 91–95%).
+
+use super::{run_scenario, Scale};
+use crate::config::SchedulerKind;
+use crate::util::table;
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub scheduler: SchedulerKind,
+    pub latency_s: f64,
+    pub gpu_util_pct: f64,
+    pub mem_util_pct: f64,
+    pub energy_j: f64,
+    pub hit_rate_pct: f64,
+}
+
+pub fn compute(scale: Scale) -> Vec<Table1Row> {
+    SchedulerKind::ALL
+        .iter()
+        .map(|&s| {
+            let m = run_scenario(s, 2.0, scale, |_| {});
+            Table1Row {
+                scheduler: s,
+                latency_s: m.mean_latency_s(),
+                gpu_util_pct: m.gpu_utilization(),
+                mem_util_pct: m.gpu_memory_utilization(),
+                energy_j: m.gpu_energy_joules(),
+                hit_rate_pct: m.cache_hit_rate(),
+            }
+        })
+        .collect()
+}
+
+pub fn run(scale: Scale) -> Vec<Table1Row> {
+    let rows = compute(scale);
+    println!("\n=== Table 1 — scheduler performance metrics (2 req/s) ===\n");
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.scheduler.name().to_string(),
+                format!("{:.1}", r.latency_s),
+                format!("{:.0}", r.gpu_util_pct),
+                format!("{:.0}", r.mem_util_pct),
+                format!("{:.0}", r.energy_j),
+                format!("{:.1}", r.hit_rate_pct),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        table::render(
+            &["scheduler", "latency (s)", "gpu util %", "mem util %", "energy (J)", "hit rate %"],
+            &body
+        )
+    );
+    rows
+}

@@ -1,0 +1,78 @@
+//! §5.4 — simulator validation against the live system.
+//!
+//! The paper validated its event-driven simulator against the real 5-worker
+//! deployment and saw differences "within 5% of the median numeric values".
+//! We replay one identical workload through (a) the discrete-event
+//! simulator and (b) the live thread-per-worker coordinator (with real PJRT
+//! execution when artifacts are available) and compare median latency and
+//! slow-down.
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{LiveCluster, LiveConfig};
+use crate::util::stats::percentile;
+use crate::workload;
+use crate::Simulator;
+use std::path::PathBuf;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct ValidationResult {
+    pub jobs: usize,
+    pub sim_median_latency_s: f64,
+    pub live_median_latency_s: f64,
+    pub sim_median_slowdown: f64,
+    pub live_median_slowdown: f64,
+    pub pjrt_executions: u64,
+}
+
+impl ValidationResult {
+    pub fn latency_gap(&self) -> f64 {
+        (self.sim_median_latency_s - self.live_median_latency_s).abs()
+            / self.live_median_latency_s
+    }
+
+    pub fn within_tolerance(&self, tol: f64) -> bool {
+        self.latency_gap() <= tol
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "validation over {} jobs (5 workers):\n\
+             \x20 median latency   sim {:.3} s   live {:.3} s   gap {:.1}%\n\
+             \x20 median slowdown  sim {:.3}     live {:.3}\n\
+             \x20 live PJRT executions: {}",
+            self.jobs,
+            self.sim_median_latency_s,
+            self.live_median_latency_s,
+            100.0 * self.latency_gap(),
+            self.sim_median_slowdown,
+            self.live_median_slowdown,
+            self.pjrt_executions,
+        )
+    }
+}
+
+pub fn run(n_jobs: usize, seed: u64, artifacts: Option<PathBuf>) -> anyhow::Result<ValidationResult> {
+    let cfg = ClusterConfig::default().with_seed(seed);
+    let jobs = workload::poisson(1.5, n_jobs, &[], seed ^ 0x9e37);
+
+    let sim = Simulator::simulate(cfg.clone(), jobs.clone()).metrics;
+
+    // Live replay, scaled 50x (fast but still far coarser than thread
+    // scheduling noise).
+    let live_cfg = LiveConfig { time_scale: 50.0, wall_timeout: Duration::from_secs(300) };
+    let live = LiveCluster::run(cfg, live_cfg, artifacts, jobs)?;
+
+    let med = |xs: &[f64]| percentile(xs, 50.0);
+    let lat = |m: &crate::metrics::MetricsSink| {
+        m.jobs.iter().map(|j| j.latency_us() as f64 / 1e6).collect::<Vec<_>>()
+    };
+    Ok(ValidationResult {
+        jobs: n_jobs,
+        sim_median_latency_s: med(&lat(&sim)),
+        live_median_latency_s: med(&lat(&live.metrics)),
+        sim_median_slowdown: sim.median_slowdown(),
+        live_median_slowdown: live.metrics.median_slowdown(),
+        pjrt_executions: live.pjrt_executions,
+    })
+}

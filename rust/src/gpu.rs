@@ -1,0 +1,294 @@
+//! GPU Memory Manager (paper §3.3 and §5.3).
+//!
+//! GPU memory is treated as a cache of ML models (*Navigator cache*). The
+//! worker makes local fetch/evict decisions driven by its assigned tasks;
+//! contents are published to peers as a 64-bit bitmap (§5.2). Two eviction
+//! policies are implemented, matching §5.3: FIFO and queue-lookahead
+//! (approximate Belady using the execution queue's known future).
+
+use crate::core::{Micros, ModelId};
+use crate::dfg::models::model_bytes;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict least-recently-*inserted* first (§5.3.1).
+    Fifo,
+    /// Look ahead `window` queued tasks; evict the resident model whose next
+    /// use is farthest in the future (absent = farthest of all) (§5.3.2).
+    QueueLookahead { window: usize },
+}
+
+impl Default for EvictionPolicy {
+    fn default() -> Self {
+        EvictionPolicy::QueueLookahead { window: 16 }
+    }
+}
+
+/// Counters the Global State Monitor and Table 1 metrics read.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub fetches: u64,
+    pub evictions: u64,
+    /// Integral of resident bytes over time (for memory-utilization %).
+    pub byte_time_integral: u128,
+    pub last_update_us: Micros,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            return 1.0;
+        }
+        self.hits as f64 / (self.hits + self.misses) as f64
+    }
+}
+
+/// One worker's Navigator cache.
+#[derive(Debug, Clone)]
+pub struct GpuCache {
+    capacity: u64,
+    used: u64,
+    /// Residents in insertion order (front = oldest, FIFO order).
+    resident: Vec<ModelId>,
+    /// Pin counts: models used by currently-executing tasks are unevictable.
+    pins: [u16; 64],
+    policy: EvictionPolicy,
+    pub stats: CacheStats,
+}
+
+impl GpuCache {
+    pub fn new(capacity: u64, policy: EvictionPolicy) -> GpuCache {
+        GpuCache {
+            capacity,
+            used: 0,
+            resident: Vec::with_capacity(8),
+            pins: [0; 64],
+            policy,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    /// AVC(w): available Navigator-cache memory (§4.1).
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn contains(&self, m: ModelId) -> bool {
+        self.resident.contains(&m)
+    }
+
+    pub fn resident(&self) -> &[ModelId] {
+        &self.resident
+    }
+
+    /// The §5.2 cache-line encoding: bit i set ⇔ model i resident.
+    pub fn bitmap(&self) -> u64 {
+        self.resident.iter().fold(0u64, |b, &m| b | (1u64 << m))
+    }
+
+    pub fn pin(&mut self, m: ModelId) {
+        debug_assert!(self.contains(m), "pin of non-resident model {m}");
+        self.pins[m as usize] += 1;
+    }
+
+    pub fn unpin(&mut self, m: ModelId) {
+        debug_assert!(self.pins[m as usize] > 0);
+        self.pins[m as usize] -= 1;
+    }
+
+    fn pinned(&self, m: ModelId) -> bool {
+        self.pins[m as usize] > 0
+    }
+
+    /// Advance the byte-time integral (call before any resident-set change
+    /// and at metric sampling points).
+    pub fn advance_time(&mut self, now: Micros) {
+        if now > self.stats.last_update_us {
+            let dt = (now - self.stats.last_update_us) as u128;
+            self.stats.byte_time_integral += dt * self.used as u128;
+            self.stats.last_update_us = now;
+        }
+    }
+
+    /// Decide which models to evict to make room for `need` bytes, given the
+    /// models required by upcoming queued tasks (`lookahead`, nearest first).
+    /// Returns None if pinned residents make it impossible right now.
+    pub fn plan_eviction(&self, need: u64, lookahead: &[ModelId]) -> Option<Vec<ModelId>> {
+        if need <= self.free_bytes() {
+            return Some(Vec::new());
+        }
+        let mut order: Vec<ModelId> = match self.policy {
+            EvictionPolicy::Fifo => self.resident.clone(),
+            EvictionPolicy::QueueLookahead { window } => {
+                // Priority = position of next use in the (windowed) queue;
+                // unused-in-window models sort first in eviction order.
+                // Ties (both unused, or impossible same position) break by
+                // FIFO insertion order.
+                let horizon = lookahead.len().min(window);
+                let next_use = |m: ModelId| -> usize {
+                    lookahead[..horizon]
+                        .iter()
+                        .position(|&x| x == m)
+                        .unwrap_or(usize::MAX)
+                };
+                let mut order: Vec<(usize, ModelId)> =
+                    self.resident.iter().copied().enumerate().collect();
+                order.sort_by(|a, b| next_use(b.1).cmp(&next_use(a.1)).then(a.0.cmp(&b.0)));
+                order.into_iter().map(|(_, m)| m).collect()
+            }
+        };
+        order.retain(|&m| !self.pinned(m));
+        let mut freed = self.free_bytes();
+        let mut victims = Vec::new();
+        for m in order {
+            if freed >= need {
+                break;
+            }
+            freed += model_bytes(m);
+            victims.push(m);
+        }
+        if freed >= need {
+            Some(victims)
+        } else {
+            None
+        }
+    }
+
+    /// Evict a specific model (must be resident and unpinned).
+    pub fn evict(&mut self, m: ModelId, now: Micros) {
+        self.advance_time(now);
+        debug_assert!(!self.pinned(m), "evicting pinned model {m}");
+        let pos = self.resident.iter().position(|&x| x == m).expect("evict non-resident");
+        self.resident.remove(pos);
+        self.used -= model_bytes(m);
+        self.stats.evictions += 1;
+    }
+
+    /// Insert a fetched model (space must already be available).
+    pub fn insert(&mut self, m: ModelId, now: Micros) {
+        self.advance_time(now);
+        debug_assert!(!self.contains(m), "double insert of model {m}");
+        let sz = model_bytes(m);
+        assert!(sz <= self.free_bytes(), "insert without room: {m}");
+        self.resident.push(m);
+        self.used += sz;
+        self.stats.fetches += 1;
+    }
+
+    pub fn record_hit(&mut self) {
+        self.stats.hits += 1;
+    }
+
+    pub fn record_miss(&mut self) {
+        self.stats.misses += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::GB;
+    use crate::dfg::models::*;
+
+    fn cache(policy: EvictionPolicy) -> GpuCache {
+        GpuCache::new(16 * GB, policy)
+    }
+
+    #[test]
+    fn bitmap_encoding() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.insert(OPT, 0);
+        c.insert(BART, 0);
+        assert_eq!(c.bitmap(), (1 << OPT) | (1 << BART));
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_first() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.insert(OPT, 0); // 6 GB
+        c.insert(MT5, 0); // 5 GB
+        c.insert(MARIAN, 0); // 3 GB -> 14 GB used, 2 free
+        let victims = c.plan_eviction(model_bytes(BART), &[]).unwrap(); // need 5
+        assert_eq!(victims, vec![OPT]);
+    }
+
+    #[test]
+    fn fifo_skips_pinned() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.insert(OPT, 0);
+        c.insert(MT5, 0);
+        c.insert(MARIAN, 0);
+        c.pin(OPT);
+        let victims = c.plan_eviction(model_bytes(BART), &[]).unwrap();
+        assert_eq!(victims, vec![MT5]);
+    }
+
+    #[test]
+    fn impossible_eviction_returns_none() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.insert(OPT, 0);
+        c.insert(MT5, 0);
+        c.pin(OPT);
+        c.pin(MT5);
+        // 5 GB free; need 6 with everything pinned.
+        assert!(c.plan_eviction(6 * GB, &[]).is_none());
+    }
+
+    #[test]
+    fn lookahead_protects_soon_needed_models() {
+        let mut c = cache(EvictionPolicy::QueueLookahead { window: 8 });
+        c.insert(OPT, 0); // oldest — FIFO would evict this
+        c.insert(MT5, 0);
+        c.insert(MARIAN, 0);
+        // Queue says OPT needed next, MARIAN later, MT5 never.
+        let victims = c.plan_eviction(model_bytes(BART), &[OPT, MARIAN]).unwrap();
+        assert_eq!(victims, vec![MT5]);
+    }
+
+    #[test]
+    fn lookahead_window_limits_vision() {
+        let mut c = cache(EvictionPolicy::QueueLookahead { window: 1 });
+        c.insert(OPT, 0);
+        c.insert(MT5, 0);
+        c.insert(MARIAN, 0);
+        // MT5 appears beyond the window ⇒ treated as unused; OPT in window.
+        let victims = c.plan_eviction(model_bytes(BART), &[OPT, MT5]).unwrap();
+        // MT5 and MARIAN both "unused"; tie broken by FIFO ⇒ MT5 (older).
+        assert_eq!(victims, vec![MT5]);
+    }
+
+    #[test]
+    fn insert_evict_roundtrip_accounting() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.insert(OPT, 0);
+        assert_eq!(c.used(), 6 * GB);
+        c.evict(OPT, 10);
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.stats.fetches, 1);
+    }
+
+    #[test]
+    fn hit_rate_all_hits_when_empty_history() {
+        let c = cache(EvictionPolicy::Fifo);
+        assert_eq!(c.stats.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn byte_time_integral_advances() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.insert(OPT, 0);
+        c.advance_time(1_000_000);
+        assert_eq!(c.stats.byte_time_integral, 6 * GB as u128 * 1_000_000);
+    }
+}

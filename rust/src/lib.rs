@@ -1,0 +1,34 @@
+//! # Compass (a.k.a. Navigator) — decentralized scheduling for
+//! latency-sensitive ML workflows
+//!
+//! A full reproduction of *"Navigator: A Decentralized Scheduler for
+//! Latency-Sensitive ML Workflows"*: the scheduler (planning +
+//! dynamic-adjustment phases), GPU-memory-as-model-cache management with
+//! FIFO and queue-lookahead eviction, the SST-based decentralized state
+//! monitor with bounded staleness, the three baseline schedulers the paper
+//! compares against, a validated discrete-event simulator, a live
+//! multi-worker coordinator executing real AOT-compiled models through
+//! PJRT, and an experiment harness regenerating every table and figure of
+//! the paper's evaluation. See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod dfg;
+pub mod exp;
+pub mod gpu;
+pub mod metrics;
+pub mod net;
+pub mod profiles;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sst;
+pub mod store;
+pub mod util;
+pub mod workload;
+
+pub use config::{ClusterConfig, CompassConfig, SchedulerKind};
+pub use dfg::{Adfg, Dfg, Job, PipelineKind};
+pub use sim::{SimReport, Simulator};

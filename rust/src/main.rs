@@ -1,0 +1,118 @@
+//! Compass CLI — leader entrypoint.
+//!
+//! Subcommands (see README):
+//!   simulate    run the discrete-event simulator on a Poisson workload
+//!   experiment  regenerate a paper table/figure (fig6a..fig10, table1, all)
+//!   serve       run the live coordinator on the AOT artifacts
+//!   validate    compare simulator vs live coordinator (§5.4 methodology)
+//!   models      list compiled artifacts and run handshakes
+
+use compass::util::args::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: compass <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 simulate    --scheduler compass|jit|heft|hash --rate R --jobs N\n\
+         \x20             --workers W --seed S\n\
+         \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|all>\n\
+         \x20             [--quick] [--seed S]\n\
+         \x20 serve       --rate R --jobs N [--workers W] [--artifacts DIR]\n\
+         \x20 validate    [--jobs N] [--artifacts DIR]\n\
+         \x20 models      [--artifacts DIR]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("simulate") => cmd_simulate(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("models") => cmd_models(&args),
+        Some("smoke-dump") => cmd_smoke_dump(args.positional.get(1).map(String::as_str).unwrap_or("bart")),
+        _ => usage(),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    use compass::{ClusterConfig, SchedulerKind, Simulator};
+    let kind = SchedulerKind::parse(args.get_or("scheduler", "compass"))
+        .ok_or_else(|| anyhow::anyhow!("unknown scheduler"))?;
+    let cfg = ClusterConfig::default()
+        .with_scheduler(kind)
+        .with_workers(args.get_usize("workers", 5))
+        .with_seed(args.get_u64("seed", 42));
+    let seed = cfg.seed ^ 0x9e37;
+    let jobs = compass::workload::poisson(
+        args.get_f64("rate", 2.0),
+        args.get_usize("jobs", 200),
+        &[],
+        seed,
+    );
+    let rep = Simulator::simulate(cfg, jobs);
+    let m = &rep.metrics;
+    println!("scheduler={} jobs={} events={}", kind.name(), m.jobs.len(), rep.events_processed);
+    println!(
+        "mean latency {:.2} s | mean slowdown {:.2} | median slowdown {:.2}",
+        m.mean_latency_s(),
+        m.mean_slowdown(),
+        m.median_slowdown()
+    );
+    println!(
+        "gpu util {:.0}% | mem util {:.0}% | energy {:.0} J | hit rate {:.1}% | active workers {}",
+        m.gpu_utilization(),
+        m.gpu_memory_utilization(),
+        m.gpu_energy_joules(),
+        m.cache_hit_rate(),
+        m.active_workers()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    compass::exp::run(which, args)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    compass::coordinator::cli_serve(args)
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    compass::exp::validate_cli(args)
+}
+
+fn cmd_models(args: &Args) -> anyhow::Result<()> {
+    let default_dir = compass::runtime::artifacts_dir();
+    let dir = std::path::PathBuf::from(
+        args.get_or("artifacts", default_dir.to_str().unwrap_or("artifacts")),
+    );
+    let rt = compass::runtime::Runtime::load(&dir)?;
+    println!("{} models loaded + handshaken from {}", rt.len(), dir.display());
+    for name in rt.names() {
+        let m = rt.get(name).unwrap();
+        println!(
+            "  {:10} id={} seq={} d={} ({})",
+            name,
+            m.meta.model_id,
+            m.meta.seq_len,
+            m.meta.d_model,
+            m.meta.path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Hidden diagnostic: dump a model's smoke output as JSON floats.
+#[allow(dead_code)]
+fn cmd_smoke_dump(name: &str) -> anyhow::Result<()> {
+    let rt = compass::runtime::Runtime::load_unchecked(&compass::runtime::artifacts_dir())?;
+    let m = rt.get(name).ok_or_else(|| anyhow::anyhow!("no model {name}"))?;
+    let y = m.execute(&m.smoke_input())?;
+    println!("{:?}", y);
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Metrics collection: per-job latency and slow-down factor (§6.1), and the
+//! Table 1 GPU metrics (utilization, memory utilization, energy, cache hit
+//! rate).
+//!
+//! Energy uses a Tesla-T4-style linear power model: idle power plus a
+//! utilization-proportional active term, integrated over the experiment.
+
+use crate::core::{Micros, SEC};
+use crate::dfg::PipelineKind;
+use crate::util::stats::{mean, BoxStats};
+
+/// Power model for a T4-class inference GPU.
+pub const GPU_IDLE_WATTS: f64 = 10.0;
+pub const GPU_ACTIVE_WATTS: f64 = 70.0;
+
+/// One completed job instance.
+#[derive(Debug, Clone, Copy)]
+pub struct JobRecord {
+    pub kind: PipelineKind,
+    pub arrival_us: Micros,
+    pub completion_us: Micros,
+    pub lower_bound_us: Micros,
+}
+
+impl JobRecord {
+    pub fn latency_us(&self) -> Micros {
+        self.completion_us - self.arrival_us
+    }
+
+    /// §6.1: end-to-end latency over the zero-transfer, all-cached,
+    /// max-parallelism lower bound. Always ≥ 1 in expectation.
+    pub fn slowdown(&self) -> f64 {
+        self.latency_us() as f64 / self.lower_bound_us as f64
+    }
+}
+
+/// Per-worker aggregates sampled at simulation end.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerMetrics {
+    pub busy_us: Micros,
+    pub hits: u64,
+    pub misses: u64,
+    pub fetches: u64,
+    pub evictions: u64,
+    /// ∫ resident_bytes dt over the run.
+    pub cache_byte_time: u128,
+    pub gpu_capacity: u64,
+    /// Whether this worker executed at least one task (Fig. 10 "active").
+    pub active: bool,
+}
+
+/// Everything an experiment consumes.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSink {
+    pub jobs: Vec<JobRecord>,
+    pub workers: Vec<WorkerMetrics>,
+    pub span_us: Micros,
+    /// Jobs generated but not completed when the run ended.
+    pub incomplete: usize,
+}
+
+impl MetricsSink {
+    pub fn slowdowns(&self) -> Vec<f64> {
+        self.jobs.iter().map(|j| j.slowdown()).collect()
+    }
+
+    pub fn slowdowns_of(&self, kind: PipelineKind) -> Vec<f64> {
+        self.jobs.iter().filter(|j| j.kind == kind).map(|j| j.slowdown()).collect()
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        mean(&self.jobs.iter().map(|j| j.latency_us() as f64 / SEC as f64).collect::<Vec<_>>())
+    }
+
+    pub fn mean_slowdown(&self) -> f64 {
+        mean(&self.slowdowns())
+    }
+
+    pub fn median_slowdown(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return f64::NAN;
+        }
+        crate::util::stats::median(&self.slowdowns())
+    }
+
+    pub fn box_stats(&self, kind: PipelineKind) -> Option<BoxStats> {
+        let xs = self.slowdowns_of(kind);
+        if xs.is_empty() {
+            None
+        } else {
+            Some(BoxStats::from(&xs))
+        }
+    }
+
+    /// Table 1 "GPU utilization (%)": fraction of wall time the GPUs were
+    /// executing, averaged over workers that were ever used.
+    pub fn gpu_utilization(&self) -> f64 {
+        if self.span_us == 0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let total_busy: u128 = self.workers.iter().map(|w| w.busy_us as u128).sum();
+        100.0 * total_busy as f64 / (self.span_us as u128 * self.workers.len() as u128) as f64
+    }
+
+    /// Table 1 "GPU memory utilization (%)": time-averaged resident bytes
+    /// over capacity.
+    pub fn gpu_memory_utilization(&self) -> f64 {
+        if self.span_us == 0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let num: f64 = self
+            .workers
+            .iter()
+            .map(|w| w.cache_byte_time as f64 / (self.span_us as f64 * w.gpu_capacity as f64))
+            .sum();
+        100.0 * num / self.workers.len() as f64
+    }
+
+    /// Table 1 "GPU energy use (J)" under the linear power model.
+    pub fn gpu_energy_joules(&self) -> f64 {
+        let span_s = self.span_us as f64 / SEC as f64;
+        self.workers
+            .iter()
+            .map(|w| {
+                let busy_s = w.busy_us as f64 / SEC as f64;
+                GPU_IDLE_WATTS * span_s + (GPU_ACTIVE_WATTS - GPU_IDLE_WATTS) * busy_s
+            })
+            .sum()
+    }
+
+    /// Table 1 "GPU cache hit rate (%)".
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits: u64 = self.workers.iter().map(|w| w.hits).sum();
+        let misses: u64 = self.workers.iter().map(|w| w.misses).sum();
+        if hits + misses == 0 {
+            return 100.0;
+        }
+        100.0 * hits as f64 / (hits + misses) as f64
+    }
+
+    /// Fig. 10: number of workers doing non-negligible work. A worker that
+    /// only ever ran glue vertices (10–30 ms each) is effectively idle and
+    /// could be put in power-saving mode — the paper's resource claim — so
+    /// "active" requires > 0.5% busy time, not merely having run a task.
+    pub fn active_workers(&self) -> usize {
+        if self.span_us == 0 {
+            return 0;
+        }
+        self.workers
+            .iter()
+            .filter(|w| w.active && w.busy_us * 200 > self.span_us)
+            .count()
+    }
+}
+
+/// Accumulates busy time for one worker given task start/stop events.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BusyTracker {
+    busy_us: Micros,
+    started_at: Option<Micros>,
+}
+
+impl BusyTracker {
+    pub fn start(&mut self, now: Micros) {
+        debug_assert!(self.started_at.is_none(), "nested busy start");
+        self.started_at = Some(now);
+    }
+
+    pub fn stop(&mut self, now: Micros) {
+        let s = self.started_at.take().expect("stop without start");
+        self.busy_us += now - s;
+    }
+
+    pub fn total(&self, now: Micros) -> Micros {
+        self.busy_us + self.started_at.map(|s| now - s).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{GB, SEC};
+
+    fn record(kind: PipelineKind, lat_s: u64, lb_s: u64) -> JobRecord {
+        JobRecord {
+            kind,
+            arrival_us: 0,
+            completion_us: lat_s * SEC,
+            lower_bound_us: lb_s * SEC,
+        }
+    }
+
+    #[test]
+    fn slowdown_math() {
+        let j = record(PipelineKind::Vpa, 6, 2);
+        assert_eq!(j.slowdown(), 3.0);
+        assert_eq!(j.latency_us(), 6 * SEC);
+    }
+
+    #[test]
+    fn utilization_and_energy() {
+        let sink = MetricsSink {
+            jobs: vec![],
+            workers: vec![
+                WorkerMetrics { busy_us: 5 * SEC, gpu_capacity: 16 * GB, active: true, ..Default::default() },
+                WorkerMetrics { busy_us: 0, gpu_capacity: 16 * GB, ..Default::default() },
+            ],
+            span_us: 10 * SEC,
+            incomplete: 0,
+        };
+        assert!((sink.gpu_utilization() - 25.0).abs() < 1e-9);
+        // Energy: 2 workers idle 10 s = 200 J, plus 60 W × 5 s active = 300 J.
+        assert!((sink.gpu_energy_joules() - 500.0).abs() < 1e-9);
+        assert_eq!(sink.active_workers(), 1);
+    }
+
+    #[test]
+    fn hit_rate_percent() {
+        let sink = MetricsSink {
+            workers: vec![WorkerMetrics { hits: 99, misses: 1, ..Default::default() }],
+            ..Default::default()
+        };
+        assert!((sink.cache_hit_rate() - 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn busy_tracker_accumulates() {
+        let mut b = BusyTracker::default();
+        b.start(10);
+        b.stop(25);
+        b.start(30);
+        assert_eq!(b.total(40), 25);
+    }
+
+    #[test]
+    fn per_kind_filtering() {
+        let sink = MetricsSink {
+            jobs: vec![record(PipelineKind::Vpa, 4, 2), record(PipelineKind::Translation, 3, 1)],
+            ..Default::default()
+        };
+        assert_eq!(sink.slowdowns_of(PipelineKind::Vpa), vec![2.0]);
+        assert_eq!(sink.mean_slowdown(), 2.5);
+    }
+}

@@ -1,0 +1,151 @@
+//! Workflow Profiles Repository (paper §3.1).
+//!
+//! Holds the meta-information the scheduler's estimates are built from:
+//! expected runtime costs R(t, ·) and input/output object sizes per DFG
+//! vertex. The static values ship with the DFGs (profiled offline,
+//! covering ≥95% of observed runs); this module adds the *online* half the
+//! paper's Workflow Profiling component implies: every task completion
+//! reports its actual runtime, and an exponentially-weighted moving
+//! average refines the estimate — so mis-profiled workloads converge
+//! toward accurate FT(w) predictions instead of misleading Algorithm 1
+//! forever.
+
+use crate::core::{Micros, TaskId};
+use crate::dfg::{Dfg, PipelineKind};
+
+/// EWMA-refined runtime profile for every (pipeline, task) pair.
+#[derive(Debug, Clone)]
+pub struct ProfileRepository {
+    /// Smoothing factor for runtime updates (0 = frozen static profile,
+    /// 1 = always trust the last observation).
+    alpha: f64,
+    /// estimates[kind][task] — current R(t) estimate, µs.
+    estimates: Vec<Vec<f64>>,
+    /// Observation counts, for diagnostics and convergence tests.
+    observations: Vec<Vec<u64>>,
+}
+
+impl ProfileRepository {
+    /// Seed from the static profiles attached to the DFGs.
+    pub fn from_dfgs(dfgs: &[Dfg], alpha: f64) -> ProfileRepository {
+        assert!((0.0..=1.0).contains(&alpha));
+        ProfileRepository {
+            alpha,
+            estimates: dfgs
+                .iter()
+                .map(|d| d.vertices.iter().map(|v| v.mean_runtime_us as f64).collect())
+                .collect(),
+            observations: dfgs.iter().map(|d| vec![0; d.len()]).collect(),
+        }
+    }
+
+    /// Current R(t) estimate for a task, µs.
+    pub fn runtime(&self, kind: PipelineKind, t: TaskId) -> Micros {
+        self.estimates[kind.index()][t] as Micros
+    }
+
+    /// Record an observed runtime and refine the estimate.
+    pub fn observe(&mut self, kind: PipelineKind, t: TaskId, actual_us: Micros) {
+        let e = &mut self.estimates[kind.index()][t];
+        *e = (1.0 - self.alpha) * *e + self.alpha * actual_us as f64;
+        self.observations[kind.index()][t] += 1;
+    }
+
+    pub fn observations(&self, kind: PipelineKind, t: TaskId) -> u64 {
+        self.observations[kind.index()][t]
+    }
+
+    /// Write the refined estimates back into a set of DFGs (e.g. before
+    /// persisting, or to re-rank with converged profiles).
+    pub fn apply_to(&self, dfgs: &mut [Dfg]) {
+        for d in dfgs.iter_mut() {
+            let k = d.kind.index();
+            for v in d.vertices.iter_mut() {
+                v.mean_runtime_us = self.estimates[k][v.id] as Micros;
+            }
+        }
+    }
+
+    /// Mean relative error of the current estimates against a ground-truth
+    /// oracle (testing/diagnostics).
+    pub fn mean_rel_error(&self, truth: &dyn Fn(PipelineKind, TaskId) -> Micros) -> f64 {
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for kind in PipelineKind::ALL {
+            for (t, e) in self.estimates[kind.index()].iter().enumerate() {
+                let tr = truth(kind, t) as f64;
+                if tr > 0.0 {
+                    total += (e - tr).abs() / tr;
+                    n += 1;
+                }
+            }
+        }
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MS;
+    use crate::dfg::pipelines;
+    use crate::net::CostModel;
+    use crate::util::rng::Rng;
+
+    fn repo(alpha: f64) -> ProfileRepository {
+        ProfileRepository::from_dfgs(&pipelines::all(&CostModel::default()), alpha)
+    }
+
+    #[test]
+    fn seeds_from_static_profiles() {
+        let r = repo(0.2);
+        let dfg = pipelines::vpa(&CostModel::default());
+        for v in &dfg.vertices {
+            assert_eq!(r.runtime(PipelineKind::Vpa, v.id), v.mean_runtime_us);
+        }
+    }
+
+    #[test]
+    fn alpha_zero_freezes_estimates() {
+        let mut r = repo(0.0);
+        let before = r.runtime(PipelineKind::Vpa, 0);
+        r.observe(PipelineKind::Vpa, 0, 10 * before);
+        assert_eq!(r.runtime(PipelineKind::Vpa, 0), before);
+    }
+
+    #[test]
+    fn converges_to_shifted_truth() {
+        // The workload actually runs 2x slower than profiled: the EWMA must
+        // converge there.
+        let mut r = repo(0.2);
+        let truth = 2 * r.runtime(PipelineKind::Translation, 0);
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let sample = rng.jitter(truth as f64, 0.1, 1.0) as Micros;
+            r.observe(PipelineKind::Translation, 0, sample);
+        }
+        let est = r.runtime(PipelineKind::Translation, 0);
+        let rel = (est as f64 - truth as f64).abs() / truth as f64;
+        assert!(rel < 0.1, "est {est} vs truth {truth}");
+        assert_eq!(r.observations(PipelineKind::Translation, 0), 200);
+    }
+
+    #[test]
+    fn apply_to_updates_dfgs_and_error_metric() {
+        let cost = CostModel::default();
+        let mut dfgs = pipelines::all(&cost);
+        let mut r = ProfileRepository::from_dfgs(&dfgs, 0.5);
+        for _ in 0..50 {
+            r.observe(PipelineKind::Vpa, 0, 2000 * MS);
+        }
+        r.apply_to(&mut dfgs);
+        let updated = dfgs[PipelineKind::Vpa.index()].vertices[0].mean_runtime_us;
+        assert!(updated > 1900 * MS, "apply_to didn't persist: {updated}");
+
+        let statics = pipelines::all(&cost);
+        let err = r.mean_rel_error(&|k: PipelineKind, t: TaskId| {
+            statics[k.index()].vertices[t].mean_runtime_us
+        });
+        assert!(err > 0.0 && err < 1.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Each model is compiled once at load; execution
+//! clones no weights (they are baked into the executable as constants).
+//!
+//! A numerical handshake runs at load: the manifest carries the abs-sum of
+//! a deterministic smoke input/output pair computed by jax, and we re-run
+//! the same pair through the compiled executable — any mismatch between the
+//! python and rust halves fails loudly at startup rather than silently
+//! serving wrong numbers.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one compiled model (from artifacts/manifest.json).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub model_id: u8,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub path: PathBuf,
+    pub smoke_input_abssum: f64,
+    pub smoke_output_abssum: f64,
+}
+
+/// A loaded, compiled model executable.
+pub struct CompiledModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledModel {
+    /// Execute the forward pass on a [seq_len * d_model] f32 activation.
+    pub fn execute(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let (s, d) = (self.meta.seq_len, self.meta.d_model);
+        if input.len() != s * d {
+            bail!("input len {} != {}x{}", input.len(), s, d);
+        }
+        let lit = xla::Literal::vec1(input).reshape(&[s as i64, d as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// The deterministic smoke input python used (sin(0.01 * i)).
+    pub fn smoke_input(&self) -> Vec<f32> {
+        let n = self.meta.seq_len * self.meta.d_model;
+        (0..n).map(|i| ((i as f32) * 0.01).sin()).collect()
+    }
+
+    /// Re-run the python-side smoke pair; error if abs-sums diverge.
+    pub fn handshake(&self) -> Result<()> {
+        let x = self.smoke_input();
+        let in_abssum: f64 = x.iter().map(|v| v.abs() as f64).sum();
+        if (in_abssum - self.meta.smoke_input_abssum).abs() > 1e-2 {
+            bail!(
+                "{}: smoke input mismatch rust={} python={}",
+                self.meta.name,
+                in_abssum,
+                self.meta.smoke_input_abssum
+            );
+        }
+        let y = self.execute(&x)?;
+        let out_abssum: f64 = y.iter().map(|v| v.abs() as f64).sum();
+        let rel = (out_abssum - self.meta.smoke_output_abssum).abs()
+            / self.meta.smoke_output_abssum.max(1e-9);
+        if rel > 1e-3 {
+            bail!(
+                "{}: smoke output mismatch rust={} python={} (rel {rel})",
+                self.meta.name,
+                out_abssum,
+                self.meta.smoke_output_abssum
+            );
+        }
+        Ok(())
+    }
+}
+
+/// The model registry: every artifact compiled on one PJRT CPU client.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    models: HashMap<String, CompiledModel>,
+    by_id: HashMap<u8, String>,
+}
+
+impl Runtime {
+    /// Parse artifacts/manifest.json into metadata entries.
+    pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        let mut metas = Vec::new();
+        for (name, m) in obj {
+            let get =
+                |k: &str| m.get(k).ok_or_else(|| anyhow!("manifest[{name}] missing '{k}'"));
+            metas.push(ArtifactMeta {
+                name: name.clone(),
+                model_id: get("model_id")?.as_u64().unwrap_or(255) as u8,
+                seq_len: get("seq_len")?.as_u64().unwrap_or(0) as usize,
+                d_model: get("d_model")?.as_u64().unwrap_or(0) as usize,
+                path: dir
+                    .join(get("path")?.as_str().ok_or_else(|| anyhow!("path not a string"))?),
+                smoke_input_abssum: get("smoke_input_abssum")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("bad smoke_input_abssum"))?,
+                smoke_output_abssum: get("smoke_output_abssum")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("bad smoke_output_abssum"))?,
+            });
+        }
+        Ok(metas)
+    }
+
+    /// Load and compile every artifact WITHOUT handshakes (diagnostics).
+    pub fn load_unchecked(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let metas = Self::read_manifest(dir)?;
+        let mut models = HashMap::new();
+        let mut by_id = HashMap::new();
+        for meta in metas {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            by_id.insert(meta.model_id, meta.name.clone());
+            models.insert(meta.name.clone(), CompiledModel { meta, exe });
+        }
+        Ok(Runtime { client, models, by_id })
+    }
+
+    /// Load and compile every artifact in `dir`; run handshakes.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let metas = Self::read_manifest(dir)?;
+        let mut models = HashMap::new();
+        let mut by_id = HashMap::new();
+        for meta in metas {
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let model = CompiledModel { meta: meta.clone(), exe };
+            model.handshake().with_context(|| format!("handshake failed for {}", meta.name))?;
+            by_id.insert(meta.model_id, meta.name.clone());
+            models.insert(meta.name.clone(), model);
+        }
+        Ok(Runtime { client, models, by_id })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&CompiledModel> {
+        self.models.get(name)
+    }
+
+    pub fn get_by_id(&self, id: u8) -> Option<&CompiledModel> {
+        self.by_id.get(&id).and_then(|n| self.models.get(n))
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+/// Default artifacts directory: $COMPASS_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("COMPASS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

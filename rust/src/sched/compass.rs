@@ -1,0 +1,316 @@
+//! The Compass/Navigator scheduler: job planning (Algorithm 1) and dynamic
+//! adjustment (Algorithm 2), §4 of the paper.
+//!
+//! The planning phase extends HEFT with (a) worker queue load FT(w) from the
+//! SST, and (b) model locality via the published cache bitmaps (Eq. 2,
+//! including the eviction penalty). Dynamic adjustment re-places a non-join
+//! task whose planned worker's queue wait exceeds `R(t,w) × threshold`.
+//! Both ablation switches of §6.3.1 are honored via `CompassConfig`.
+
+use super::{arrival_at, AssignCtx, ClusterView, Scheduler};
+use crate::config::{CompassConfig, SchedulerKind};
+use crate::core::{Micros, TaskId, WorkerId};
+use crate::dfg::models::{mean_model_bytes, model_bytes};
+use crate::dfg::{Adfg, Dfg, Job};
+
+pub struct Compass {
+    cfg: CompassConfig,
+}
+
+impl Compass {
+    pub fn new(cfg: CompassConfig) -> Compass {
+        Compass { cfg }
+    }
+
+    /// Eq. 2: TD_model(t, w) with the three arms — resident, fits, evicts.
+    /// With model locality disabled (ablation), the estimate degenerates to
+    /// a uniform fetch cost: cache contents no longer differentiate workers.
+    /// `fetch` is the worker-invariant PCIe cost, hoisted by callers out of
+    /// their O(W) loops.
+    #[inline]
+    fn td_model_arms(
+        &self,
+        m: crate::core::ModelId,
+        fetch: Micros,
+        w: WorkerId,
+        view: &ClusterView,
+    ) -> Micros {
+        if !self.cfg.model_locality {
+            return fetch;
+        }
+        let row = &view.rows[w];
+        if row.cache_bitmap & (1u64 << m) != 0 {
+            0
+        } else if model_bytes(m) <= row.free_cache_bytes {
+            fetch
+        } else {
+            // Eviction penalty: the displaced model will likely need to be
+            // re-fetched soon (§4.2.2 "Eviction penalty" discussion).
+            let penalty = (view.cost.td_model(mean_model_bytes()) as f64
+                * self.cfg.eviction_penalty_factor) as Micros;
+            fetch + penalty
+        }
+    }
+
+    fn td_model_est(&self, dfg: &Dfg, t: TaskId, w: WorkerId, view: &ClusterView) -> Micros {
+        let Some(m) = dfg.vertices[t].model else { return 0 };
+        self.td_model_arms(m, view.cost.td_model(model_bytes(m)), w, view)
+    }
+}
+
+impl Scheduler for Compass {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Compass
+    }
+
+    /// Algorithm 1 — Job Planning.
+    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+        let n = dfg.len();
+        let w_count = view.n_workers();
+        // Line 2: worker_FT_map from the Global State Monitor.
+        let mut worker_ft: Vec<Micros> = (0..w_count).map(|w| view.ft(w)).collect();
+        let mut task_ft: Vec<Micros> = vec![0; n];
+        let mut adfg = Adfg::unassigned(n);
+
+        // Lines 4-12: descending rank order (precomputed statically, §4.2.1).
+        for &t in dfg.rank_order() {
+            // Hoist the worker-invariant fetch cost (Eq. 2 second arm) out
+            // of the O(W) inner loop.
+            let model = dfg.vertices[t].model;
+            let fetch_cost = model.map(|m| view.cost.td_model(model_bytes(m))).unwrap_or(0);
+            let mut best_w = 0;
+            let mut best_ft = Micros::MAX;
+            for w in 0..w_count {
+                // AT_allInputs(t, w) — Eqs. 3-4. Predecessors are already
+                // assigned (rank order is topological within a job).
+                let at_inputs = if dfg.preds[t].is_empty() {
+                    // Entry task: client input sits on the ingress worker.
+                    view.now + view.cost.td_input(job.input_bytes, view.self_worker, w)
+                } else {
+                    dfg.preds[t]
+                        .iter()
+                        .map(|&p| {
+                            let pw = adfg.get(p).expect("pred assigned before succ");
+                            task_ft[p]
+                                + view.cost.td_input(dfg.vertices[p].output_bytes, pw, w)
+                        })
+                        .max()
+                        .unwrap()
+                };
+                // Line 8: x ← max(worker_FT_map[w], AT_allInputs(t, w)).
+                let x = worker_ft[w].max(at_inputs);
+                // Line 9: FT(t,w) ← x + TD_model + R(t, w).
+                let td_model = match model {
+                    Some(m) => self.td_model_arms(m, fetch_cost, w, view),
+                    None => 0,
+                };
+                let ft = x + td_model + view.r(dfg, t, w);
+                if ft < best_ft {
+                    best_ft = ft;
+                    best_w = w;
+                }
+            }
+            // Lines 10-12.
+            adfg.set(t, best_w);
+            task_ft[t] = best_ft;
+            worker_ft[best_w] = best_ft;
+        }
+        adfg
+    }
+
+    /// Algorithm 2 — Task Dynamic Adjustment. Called when `ctx.task` becomes
+    /// dispatchable on the worker that finished its (last) predecessor.
+    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId {
+        let planned = ctx.planned.expect("compass plans every task");
+        if !self.cfg.dynamic_adjust {
+            return planned;
+        }
+        // Line 3: join tasks cannot be moved without predecessor
+        // coordination.
+        if ctx.dfg.is_join(ctx.task) {
+            return planned;
+        }
+        // Line 2: FT(w) > R(t, w) * threshold ⇒ reschedule.
+        let r_planned = view.r(ctx.dfg, ctx.task, planned);
+        let above = view.wait(planned) as f64 > r_planned as f64 * self.cfg.adjust_threshold;
+        if !above {
+            return planned;
+        }
+        // Lines 6-12: rank workers by earliest finish for this task.
+        let avail: Vec<Micros> = vec![view.now; ctx.pred_outputs.len()];
+        let mut best = planned;
+        let mut best_ft = Micros::MAX;
+        for w in 0..view.n_workers() {
+            // Lines 8-11: queue wait + model fetch + runtime, plus the input
+            // transfer when moving off this scheduler's worker (arrival_at
+            // charges only non-colocated inputs, a refinement of line 11).
+            let arrive = arrival_at(view, ctx.pred_outputs, &avail, w);
+            let start = view.ft(w).max(arrive);
+            let ft = start
+                + self.td_model_est(ctx.dfg, ctx.task, w, view)
+                + view.r(ctx.dfg, ctx.task, w);
+            if ft < best_ft {
+                best_ft = ft;
+                best = w;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CompassConfig;
+    use crate::core::{GB, MS, SEC};
+    use crate::dfg::models::OPT;
+    use crate::dfg::pipelines;
+    use crate::net::CostModel;
+    use crate::sst::SstRow;
+
+    fn view_with<'a>(
+        rows: &'a [SstRow],
+        cost: &'a CostModel,
+        speed: &'a [f64],
+    ) -> ClusterView<'a> {
+        ClusterView { now: 0, self_worker: 0, rows, cost, speed }
+    }
+
+    fn job(kind: crate::dfg::PipelineKind) -> Job {
+        Job { id: 1, kind, arrival_us: 0, input_bytes: 1000 }
+    }
+
+    #[test]
+    fn plan_assigns_every_task() {
+        let cost = CostModel::default();
+        let dfg = pipelines::translation(&cost);
+        let rows = vec![SstRow::default(); 5];
+        let speed = vec![1.0; 5];
+        let c = Compass::new(CompassConfig::default());
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        assert!(adfg.assignment.iter().all(|a| a.is_some()));
+    }
+
+    #[test]
+    fn plan_prefers_cached_model_worker() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost); // v0 needs OPT
+        let mut rows = vec![SstRow::default(); 3];
+        for r in rows.iter_mut() {
+            r.free_cache_bytes = 16 * GB;
+        }
+        rows[2].cache_bitmap = 1 << OPT; // only worker 2 has OPT resident
+        let speed = vec![1.0; 3];
+        let c = Compass::new(CompassConfig::default());
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        assert_eq!(adfg.get(0), Some(2), "should chase the cached OPT");
+    }
+
+    #[test]
+    fn locality_ablation_ignores_cache() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 3];
+        for r in rows.iter_mut() {
+            r.free_cache_bytes = 16 * GB;
+        }
+        rows[2].cache_bitmap = 1 << OPT;
+        let speed = vec![1.0; 3];
+        let c = Compass::new(CompassConfig { model_locality: false, ..Default::default() });
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        // Without locality the estimate is uniform; ingress colocation wins.
+        assert_eq!(adfg.get(0), Some(0));
+    }
+
+    #[test]
+    fn plan_balances_away_from_loaded_worker() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 2];
+        rows[0].ft_us = 60 * SEC; // worker 0 has a huge backlog
+        for r in rows.iter_mut() {
+            r.free_cache_bytes = 16 * GB;
+        }
+        let speed = vec![1.0; 2];
+        let c = Compass::new(CompassConfig::default());
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        assert!(adfg.assignment.iter().all(|&a| a == Some(1)));
+    }
+
+    #[test]
+    fn eviction_penalty_steers_to_free_worker() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 2];
+        rows[0].free_cache_bytes = 0; // would need eviction
+        rows[1].free_cache_bytes = 16 * GB;
+        let speed = vec![1.0; 2];
+        let c = Compass::new(CompassConfig::default());
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        assert_eq!(adfg.get(0), Some(1));
+    }
+
+    #[test]
+    fn adjust_keeps_plan_when_wait_low() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let rows = vec![SstRow::default(); 3];
+        let speed = vec![1.0; 3];
+        let view = view_with(&rows, &cost, &speed);
+        let c = Compass::new(CompassConfig::default());
+        let j = job(dfg.kind);
+        let outs = [(0usize, 100u64)];
+        let ctx = AssignCtx { job: &j, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
+        assert_eq!(c.assign(&ctx, &view), 1);
+    }
+
+    #[test]
+    fn adjust_moves_overloaded_nonjoin() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 3];
+        rows[1].ft_us = 120 * SEC; // planned worker overloaded
+        for r in rows.iter_mut() {
+            r.free_cache_bytes = 16 * GB;
+        }
+        let speed = vec![1.0; 3];
+        let view = ClusterView { now: 10 * MS, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let c = Compass::new(CompassConfig::default());
+        let j = job(dfg.kind);
+        let outs = [(0usize, 100u64)];
+        let ctx = AssignCtx { job: &j, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
+        let w = c.assign(&ctx, &view);
+        assert_ne!(w, 1, "should escape the overloaded worker");
+    }
+
+    #[test]
+    fn adjust_never_moves_join() {
+        let cost = CostModel::default();
+        let dfg = pipelines::perception(&cost);
+        let mut rows = vec![SstRow::default(); 3];
+        rows[2].ft_us = 120 * SEC;
+        let speed = vec![1.0; 3];
+        let view = view_with(&rows, &cost, &speed);
+        let c = Compass::new(CompassConfig::default());
+        let j = job(dfg.kind);
+        let outs = [(0usize, 100u64), (1usize, 100u64)];
+        let ctx =
+            AssignCtx { job: &j, dfg: &dfg, task: dfg.exit, planned: Some(2), pred_outputs: &outs };
+        assert_eq!(c.assign(&ctx, &view), 2, "join tasks are pinned");
+    }
+
+    #[test]
+    fn adjust_disabled_is_identity() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 3];
+        rows[1].ft_us = 120 * SEC;
+        let speed = vec![1.0; 3];
+        let view = view_with(&rows, &cost, &speed);
+        let c = Compass::new(CompassConfig { dynamic_adjust: false, ..Default::default() });
+        let j = job(dfg.kind);
+        let outs = [(0usize, 100u64)];
+        let ctx = AssignCtx { job: &j, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
+        assert_eq!(c.assign(&ctx, &view), 1);
+    }
+}

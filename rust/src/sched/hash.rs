@@ -1,0 +1,76 @@
+//! Hash load-balancing baseline (§6.2.1).
+//!
+//! Task placement by hashing the task name combined with the request id —
+//! uniform distribution across workers, no state consulted. This is the
+//! load balancer Cascade shipped before Navigator replaced it (§5), and
+//! the scalability foil of Figure 10.
+
+use super::{AssignCtx, ClusterView, Scheduler};
+use crate::config::SchedulerKind;
+use crate::core::{hash_pair, WorkerId};
+use crate::dfg::{Adfg, Dfg, Job};
+
+pub struct HashSched;
+
+impl Scheduler for HashSched {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Hash
+    }
+
+    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+        let mut adfg = Adfg::unassigned(dfg.len());
+        for t in 0..dfg.len() {
+            adfg.set(t, (hash_pair(job.id, t as u64) % view.n_workers() as u64) as WorkerId);
+        }
+        adfg
+    }
+
+    fn assign(&self, ctx: &AssignCtx, _view: &ClusterView) -> WorkerId {
+        ctx.planned.expect("hash plans every task")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::CostModel;
+    use crate::sst::SstRow;
+
+    #[test]
+    fn distribution_is_roughly_uniform() {
+        let cost = CostModel::default();
+        let dfg = crate::dfg::pipelines::translation(&cost);
+        let rows = vec![SstRow::default(); 4];
+        let speed = vec![1.0; 4];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let mut counts = [0usize; 4];
+        for id in 0..4000u64 {
+            let job = Job { id, kind: dfg.kind, arrival_us: 0, input_bytes: 10 };
+            let adfg = HashSched.plan(&job, &dfg, &view);
+            for t in 0..dfg.len() {
+                counts[adfg.get(t).unwrap()] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let expect = total / 4;
+        for c in counts {
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < (expect / 5) as u64,
+                "skewed: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_job() {
+        let cost = CostModel::default();
+        let dfg = crate::dfg::pipelines::vpa(&cost);
+        let rows = vec![SstRow::default(); 3];
+        let speed = vec![1.0; 3];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 42, kind: dfg.kind, arrival_us: 0, input_bytes: 10 };
+        let a = HashSched.plan(&job, &dfg, &view);
+        let b = HashSched.plan(&job, &dfg, &view);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

@@ -1,0 +1,119 @@
+//! Classic HEFT baseline (§6.2.1).
+//!
+//! Upward-rank ordering and earliest-finish-time worker selection
+//! (Topcuoglu et al. 2002), but — as the paper emphasizes — *without* the
+//! Compass extensions: no worker queue load (FT(w) from the SST is
+//! ignored), no ML-model locality, and no dynamic adjustment (the ADFG is
+//! locked at planning time). Within one job instance it still tracks its
+//! own processor-availability map, as classic HEFT does.
+
+use super::{AssignCtx, ClusterView, Scheduler};
+use crate::config::SchedulerKind;
+use crate::core::{Micros, WorkerId};
+use crate::dfg::{Adfg, Dfg, Job};
+
+pub struct Heft;
+
+impl Scheduler for Heft {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Heft
+    }
+
+    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+        let n = dfg.len();
+        let w_count = view.n_workers();
+        // Per-job processor availability; starts at `now` everywhere —
+        // the cluster-wide backlog is invisible to classic HEFT.
+        let mut avail: Vec<Micros> = vec![view.now; w_count];
+        let mut task_ft: Vec<Micros> = vec![0; n];
+        let mut adfg = Adfg::unassigned(n);
+
+        for &t in dfg.rank_order() {
+            let mut best_w = 0;
+            let mut best_ft = Micros::MAX;
+            for w in 0..w_count {
+                let at_inputs = if dfg.preds[t].is_empty() {
+                    view.now + view.cost.td_input(job.input_bytes, view.self_worker, w)
+                } else {
+                    dfg.preds[t]
+                        .iter()
+                        .map(|&p| {
+                            let pw = adfg.get(p).unwrap();
+                            task_ft[p] + view.cost.td_input(dfg.vertices[p].output_bytes, pw, w)
+                        })
+                        .max()
+                        .unwrap()
+                };
+                let eft = avail[w].max(at_inputs) + view.r(dfg, t, w);
+                if eft < best_ft {
+                    best_ft = eft;
+                    best_w = w;
+                }
+            }
+            adfg.set(t, best_w);
+            task_ft[t] = best_ft;
+            avail[best_w] = best_ft;
+        }
+        adfg
+    }
+
+    /// No adjustment phase: workers adhere to the locked schedule.
+    fn assign(&self, ctx: &AssignCtx, _view: &ClusterView) -> WorkerId {
+        ctx.planned.expect("HEFT plans every task")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::SEC;
+    use crate::dfg::pipelines;
+    use crate::net::CostModel;
+    use crate::sst::SstRow;
+
+    #[test]
+    fn plan_ignores_queue_backlog() {
+        // Worker 0 is hugely backlogged in the SST, but classic HEFT cannot
+        // see it — with symmetric workers it still lands tasks there.
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 2];
+        rows[0].ft_us = 600 * SEC;
+        let speed = vec![1.0; 2];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 1000 };
+        let adfg = Heft.plan(&job, &dfg, &view);
+        // Chain pipeline colocates on the ingress worker: exactly the
+        // blindness the paper criticizes.
+        assert_eq!(adfg.get(0), Some(0));
+    }
+
+    #[test]
+    fn parallel_branches_spread_across_workers() {
+        let cost = CostModel::default();
+        let dfg = pipelines::translation(&cost);
+        let rows = vec![SstRow::default(); 4];
+        let speed = vec![1.0; 4];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 1000 };
+        let adfg = Heft.plan(&job, &dfg, &view);
+        // The three translation branches (tasks 1..3) must not all share one
+        // worker: HEFT's EFT criterion exploits parallelism.
+        let ws: std::collections::HashSet<_> =
+            [1, 2, 3].iter().map(|&t| adfg.get(t).unwrap()).collect();
+        assert!(ws.len() >= 2, "branches collapsed onto {ws:?}");
+    }
+
+    #[test]
+    fn assign_is_locked_to_plan() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let rows = vec![SstRow::default(); 2];
+        let speed = vec![1.0; 2];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 1000 };
+        let outs = [(0usize, 10u64)];
+        let ctx = AssignCtx { job: &job, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
+        assert_eq!(Heft.assign(&ctx, &view), 1);
+    }
+}

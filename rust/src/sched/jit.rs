@@ -1,0 +1,110 @@
+//! Just-in-time baseline (§6.2.1).
+//!
+//! No planning phase at all: each task is placed only when it becomes
+//! dispatchable, on the worker offering the earliest start time —
+//! worker queue wait (from the Global State Monitor) + model fetch time +
+//! intermediate-data transfer. Optimizes each task in isolation; the paper
+//! shows it beats HEFT/Hash under load but loses to Compass for lack of
+//! intra-job coordination.
+
+use super::{arrival_at, AssignCtx, ClusterView, Scheduler};
+use crate::config::SchedulerKind;
+use crate::core::{Micros, WorkerId};
+use crate::dfg::models::model_bytes;
+use crate::dfg::{Adfg, Dfg, Job};
+
+pub struct Jit;
+
+impl Scheduler for Jit {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Jit
+    }
+
+    /// JIT does not plan: every slot stays unassigned.
+    fn plan(&self, _job: &Job, dfg: &Dfg, _view: &ClusterView) -> Adfg {
+        Adfg::unassigned(dfg.len())
+    }
+
+    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId {
+        let avail: Vec<Micros> = vec![view.now; ctx.pred_outputs.len()];
+        let mut best = view.self_worker;
+        let mut best_start = Micros::MAX;
+        for w in 0..view.n_workers() {
+            let arrive = arrival_at(view, ctx.pred_outputs, &avail, w);
+            let td_model = match ctx.dfg.vertices[ctx.task].model {
+                Some(m) if view.rows[w].cache_bitmap & (1u64 << m) == 0 => {
+                    view.cost.td_model(model_bytes(m))
+                }
+                _ => 0,
+            };
+            let start = view.ft(w).max(arrive) + td_model;
+            if start < best_start {
+                best_start = start;
+                best = w;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{GB, SEC};
+    use crate::dfg::models::OPT;
+    use crate::dfg::pipelines;
+    use crate::net::CostModel;
+    use crate::sst::SstRow;
+
+    fn ctx_for<'a>(
+        job: &'a Job,
+        dfg: &'a Dfg,
+        task: usize,
+        outs: &'a [(usize, u64)],
+    ) -> AssignCtx<'a> {
+        AssignCtx { job, dfg, task, planned: None, pred_outputs: outs }
+    }
+
+    #[test]
+    fn plan_is_empty() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let rows = vec![SstRow::default(); 2];
+        let speed = vec![1.0; 2];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
+        let adfg = Jit.plan(&job, &dfg, &view);
+        assert!(adfg.assignment.iter().all(|a| a.is_none()));
+    }
+
+    #[test]
+    fn picks_cached_worker_over_idle_one() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost); // task 0 needs OPT (6 GB ≈ 0.5 s fetch)
+        let mut rows = vec![SstRow::default(); 2];
+        rows[1].cache_bitmap = 1 << OPT;
+        rows[1].free_cache_bytes = 10 * GB;
+        rows[0].free_cache_bytes = 16 * GB;
+        let speed = vec![1.0; 2];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
+        let outs = [(0usize, 100u64)];
+        let w = Jit.assign(&ctx_for(&job, &dfg, 0, &outs), &view);
+        assert_eq!(w, 1);
+    }
+
+    #[test]
+    fn avoids_long_queue() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let mut rows = vec![SstRow::default(); 2];
+        rows[0].ft_us = 30 * SEC;
+        let speed = vec![1.0; 2];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
+        let outs = [(0usize, 100u64)];
+        // Glue task (no model) — pure queue comparison.
+        let w = Jit.assign(&ctx_for(&job, &dfg, 2, &outs), &view);
+        assert_eq!(w, 1);
+    }
+}

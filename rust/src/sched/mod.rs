@@ -1,0 +1,168 @@
+//! Scheduling: the Compass/Navigator algorithm (§4) and the §6.2.1
+//! baselines (JIT, classic HEFT, Hash), behind one trait that both the
+//! simulator and the live coordinator drive.
+//!
+//! Two hooks mirror the paper's two phases:
+//!   * `plan` — job-instance planning, run once by the worker that received
+//!     the request; produces the initial ADFG (Algorithm 1 for Compass).
+//!   * `assign` — called when a task becomes dispatchable (all predecessors
+//!     finished); this is where dynamic adjustment (Algorithm 2) happens.
+//!     Schedulers without an adjustment phase return the planned worker;
+//!     JIT defers all placement to this hook.
+
+pub mod compass;
+pub mod hash;
+pub mod heft;
+pub mod jit;
+
+use crate::config::{ClusterConfig, SchedulerKind};
+use crate::core::{Micros, TaskId, WorkerId};
+use crate::dfg::{Adfg, Dfg, Job};
+use crate::net::CostModel;
+use crate::sst::SstRow;
+
+/// What a scheduling decision can see: the *published* SST rows (with the
+/// deciding worker's own row refreshed live — a worker always knows its own
+/// state), plus static cluster facts.
+pub struct ClusterView<'a> {
+    pub now: Micros,
+    /// The worker running this scheduling decision.
+    pub self_worker: WorkerId,
+    /// Published SST rows; `rows[self_worker]` is live.
+    pub rows: &'a [SstRow],
+    pub cost: &'a CostModel,
+    /// Per-worker speed factor; R(t,w) = R(t) * speed[w].
+    pub speed: &'a [f64],
+}
+
+impl<'a> ClusterView<'a> {
+    pub fn n_workers(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// R(t, w): expected runtime of task t on worker w (§4.1).
+    #[inline]
+    pub fn r(&self, dfg: &Dfg, t: TaskId, w: WorkerId) -> Micros {
+        (dfg.vertices[t].mean_runtime_us as f64 * self.speed[w]) as Micros
+    }
+
+    /// FT(w): absolute estimated finish time of w's queue, clamped to now
+    /// (a queue can't finish in the past).
+    #[inline]
+    pub fn ft(&self, w: WorkerId) -> Micros {
+        self.rows[w].ft_us.max(self.now)
+    }
+
+    /// Wait time on w's queue as estimated from the published row.
+    #[inline]
+    pub fn wait(&self, w: WorkerId) -> Micros {
+        self.rows[w].ft_us.saturating_sub(self.now)
+    }
+}
+
+/// Context for an `assign` call: task t has just become dispatchable.
+pub struct AssignCtx<'a> {
+    pub job: &'a Job,
+    pub dfg: &'a Dfg,
+    pub task: TaskId,
+    /// The ADFG's current placement for this task (None only under JIT).
+    pub planned: Option<WorkerId>,
+    /// (worker currently holding the data, bytes) for each input of t.
+    /// For the entry task this is the client input at the ingress worker.
+    pub pred_outputs: &'a [(WorkerId, u64)],
+}
+
+pub trait Scheduler: Send + Sync {
+    fn kind(&self) -> SchedulerKind;
+
+    /// Job-instance planning phase: produce the initial ADFG.
+    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg;
+
+    /// Task is dispatchable: confirm or change its worker.
+    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId;
+}
+
+/// Instantiate the configured scheduler.
+pub fn build(cfg: &ClusterConfig) -> Box<dyn Scheduler> {
+    match cfg.scheduler {
+        SchedulerKind::Compass => Box::new(compass::Compass::new(cfg.compass)),
+        SchedulerKind::Jit => Box::new(jit::Jit),
+        SchedulerKind::Heft => Box::new(heft::Heft),
+        SchedulerKind::Hash => Box::new(hash::HashSched),
+    }
+}
+
+/// Shared estimate: earliest arrival of all of t's inputs at worker w,
+/// given where each input currently (or will) live. `avail[i]` is the
+/// absolute time input i becomes available at its holder.
+pub fn arrival_at(
+    view: &ClusterView,
+    inputs: &[(WorkerId, u64)],
+    avail: &[Micros],
+    w: WorkerId,
+) -> Micros {
+    inputs
+        .iter()
+        .zip(avail)
+        .map(|(&(src, bytes), &t0)| t0 + view.cost.td_input(bytes, src, w))
+        .max()
+        .unwrap_or(view.now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{MS, SEC};
+    use crate::dfg::pipelines;
+    use crate::sst::SstRow;
+
+    fn rows(n: usize) -> Vec<SstRow> {
+        vec![SstRow::default(); n]
+    }
+
+    #[test]
+    fn view_ft_clamps_to_now() {
+        let cost = CostModel::default();
+        let speed = vec![1.0; 2];
+        let mut r = rows(2);
+        r[0].ft_us = 100;
+        let view =
+            ClusterView { now: 5 * SEC, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        assert_eq!(view.ft(0), 5 * SEC);
+        assert_eq!(view.wait(0), 0);
+    }
+
+    #[test]
+    fn view_r_scales_with_speed() {
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let speed = vec![1.0, 2.0];
+        let r = rows(2);
+        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        assert_eq!(view.r(&dfg, 0, 1), 2 * view.r(&dfg, 0, 0));
+    }
+
+    #[test]
+    fn arrival_accounts_colocated_free() {
+        let cost = CostModel::default();
+        let speed = vec![1.0; 3];
+        let r = rows(3);
+        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        // The big, late input lives on worker 1; the small one on worker 2.
+        let inputs = [(1usize, 8_000_000u64), (2usize, 1_000_000u64)];
+        let avail = [20 * MS, 10 * MS];
+        // At worker 1 the dominant input is free (colocated).
+        let a1 = arrival_at(&view, &inputs, &avail, 1);
+        let a2 = arrival_at(&view, &inputs, &avail, 0);
+        assert!(a1 < a2, "a1={a1} a2={a2}");
+        assert!(a1 >= 20 * MS);
+    }
+
+    #[test]
+    fn build_constructs_each_kind() {
+        for kind in SchedulerKind::ALL {
+            let cfg = ClusterConfig::default().with_scheduler(kind);
+            assert_eq!(build(&cfg).kind(), kind);
+        }
+    }
+}

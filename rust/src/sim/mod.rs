@@ -1,0 +1,611 @@
+//! Discrete-event simulator (paper §5.4).
+//!
+//! Models exactly the elements of §3: per-worker execution queues, the task
+//! dispatcher loop (skipping tasks whose inputs or models aren't ready),
+//! GPU model fetches over PCIe with cache eviction, ADFG dispatch and
+//! intermediate-output transfers over the network, and rate-limited SST
+//! pushes. Events are processed in simulated-time order with a
+//! deterministic tiebreaker, so every run is bit-reproducible from its
+//! seed. The paper validated its simulator within 5% of the real system at
+//! 5 workers; `compass validate` repeats that comparison against our live
+//! coordinator (see `exp::validate`).
+
+mod worker;
+
+pub use worker::{QTask, SimWorker};
+
+use crate::config::ClusterConfig;
+use crate::core::{hash_pair, Micros, ModelId, TaskId, WorkerId};
+use crate::dfg::models::model_bytes;
+use crate::dfg::{pipelines, Adfg, Dfg, Job};
+use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
+use crate::profiles::ProfileRepository;
+use crate::sched::{self, AssignCtx, ClusterView, Scheduler};
+use crate::sst::{Sst, SstRow};
+use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Salt for the client's ingress-worker choice.
+const INGRESS_SALT: u64 = 0x1693_55aa;
+
+/// Simulation events. Heap ordering is (time, seq): simultaneous events
+/// process deterministically in creation order.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    JobArrival { job_idx: usize },
+    /// ADFG message lands at `w`: task joins its execution queue.
+    TaskEnqueue { w: WorkerId, job_idx: usize, task: TaskId },
+    /// One input object for (job, task) landed at the assigned worker.
+    InputArrive { job_idx: usize, task: TaskId },
+    /// PCIe fetch of `model` finished on `w`.
+    FetchDone { w: WorkerId, model: ModelId },
+    /// Task execution finished on `w`.
+    ExecDone { w: WorkerId, job_idx: usize, task: TaskId },
+    /// Rate-limited SST pushes (§5.2); separate load/cache timers (Fig. 8).
+    PushLoad { w: WorkerId },
+    PushCache { w: WorkerId },
+}
+
+/// Per-job bookkeeping during simulation.
+struct JobState {
+    job: Job,
+    adfg: Adfg,
+    /// Arrived-input counters per task (entry counts the client input).
+    inputs_arrived: Vec<usize>,
+    remaining_preds: Vec<usize>,
+    done: Vec<bool>,
+    /// Worker holding each task's output once done.
+    output_worker: Vec<Option<WorkerId>>,
+    /// Per-edge output-sent flags, indexed parallel to dfg.succs[t].
+    sent: Vec<Vec<bool>>,
+    completed: bool,
+}
+
+impl JobState {
+    fn new(job: Job, dfg: &Dfg) -> JobState {
+        let n = dfg.len();
+        JobState {
+            job,
+            adfg: Adfg::unassigned(n),
+            inputs_arrived: vec![0; n],
+            remaining_preds: (0..n).map(|t| dfg.preds[t].len()).collect(),
+            done: vec![false; n],
+            output_worker: vec![None; n],
+            sent: (0..n).map(|t| vec![false; dfg.succs[t].len()]).collect(),
+            completed: false,
+        }
+    }
+
+    fn needed_inputs(&self, dfg: &Dfg, t: TaskId) -> usize {
+        dfg.preds[t].len().max(1) // entry waits for the client input
+    }
+}
+
+/// Result of one simulation run.
+#[derive(Debug)]
+pub struct SimReport {
+    pub metrics: MetricsSink,
+    pub events_processed: u64,
+    pub sim_span_us: Micros,
+}
+
+pub struct Simulator {
+    cfg: ClusterConfig,
+    dfgs: Vec<Dfg>,
+    scheduler: Box<dyn Scheduler>,
+    workers: Vec<SimWorker>,
+    sst: Sst,
+    jobs: Vec<JobState>,
+    heap: BinaryHeap<Reverse<(Micros, u64, Event)>>,
+    seq: u64,
+    now: Micros,
+    completed_jobs: usize,
+    records: Vec<JobRecord>,
+    speed: Vec<f64>,
+    rows_scratch: Vec<SstRow>,
+    /// Ground-truth mean runtimes (static profile × runtime_bias): what
+    /// tasks *actually* take, as opposed to what the profiles claim.
+    true_runtimes: Vec<Vec<f64>>,
+    /// Online Workflow Profiles Repository (§3.1); None when static.
+    profiles: Option<ProfileRepository>,
+    events_processed: u64,
+}
+
+impl Simulator {
+    pub fn new(cfg: ClusterConfig) -> Simulator {
+        let dfgs = pipelines::all(&cfg.cost);
+        let scheduler = sched::build(&cfg);
+        let mut rng = Rng::new(cfg.seed);
+        let workers: Vec<SimWorker> =
+            (0..cfg.n_workers).map(|id| SimWorker::new(id, &cfg, rng.fork())).collect();
+        let speed: Vec<f64> = (0..cfg.n_workers).map(|w| cfg.speed(w)).collect();
+        let true_runtimes: Vec<Vec<f64>> = dfgs
+            .iter()
+            .map(|d| {
+                d.vertices.iter().map(|v| v.mean_runtime_us as f64 * cfg.runtime_bias).collect()
+            })
+            .collect();
+        let profiles = (cfg.profile_alpha > 0.0)
+            .then(|| ProfileRepository::from_dfgs(&dfgs, cfg.profile_alpha));
+        Simulator {
+            sst: Sst::new(cfg.n_workers),
+            dfgs,
+            scheduler,
+            workers,
+            jobs: Vec::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            completed_jobs: 0,
+            records: Vec::new(),
+            speed,
+            rows_scratch: Vec::with_capacity(cfg.n_workers),
+            true_runtimes,
+            profiles,
+            events_processed: 0,
+            cfg,
+        }
+    }
+
+    fn push_event(&mut self, at: Micros, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse((at, self.seq, ev)));
+    }
+
+    /// Published rows with the deciding worker's own row refreshed live
+    /// (a worker always knows its own state, §3.4).
+    /// Fills the reusable scratch buffer (one allocation for the whole
+    /// run; this copy happens on every scheduling decision). Free function
+    /// over disjoint fields so callers can keep borrowing `self`.
+    fn fill_view_rows(
+        scratch: &mut Vec<SstRow>,
+        sst: &Sst,
+        workers: &[SimWorker],
+        now: Micros,
+        self_w: WorkerId,
+    ) {
+        scratch.clear();
+        scratch.extend_from_slice(sst.rows());
+        scratch[self_w] = workers[self_w].live_row(now);
+    }
+
+    fn view_rows(&mut self, self_w: WorkerId) {
+        Self::fill_view_rows(&mut self.rows_scratch, &self.sst, &self.workers, self.now, self_w);
+    }
+
+    /// Run `scheduler.assign` for a task that just became dispatchable on
+    /// `on_worker`, then dispatch the ADFG message and the input transfers.
+    fn assign_and_dispatch(&mut self, job_idx: usize, task: TaskId, on_worker: WorkerId) {
+        self.view_rows(on_worker);
+        // Gather immutable facts before mutating.
+        let (pred_outputs, target) = {
+            let rows = &self.rows_scratch;
+            let js = &self.jobs[job_idx];
+            let dfg = &self.dfgs[js.job.kind.index()];
+            let pred_outputs: Vec<(WorkerId, u64)> = if dfg.preds[task].is_empty() {
+                vec![(on_worker, js.job.input_bytes)]
+            } else {
+                dfg.preds[task]
+                    .iter()
+                    .map(|&p| {
+                        (js.output_worker[p].expect("pred done"), dfg.vertices[p].output_bytes)
+                    })
+                    .collect()
+            };
+            let view = ClusterView {
+                now: self.now,
+                self_worker: on_worker,
+                rows,
+                cost: &self.cfg.cost,
+                speed: &self.speed,
+            };
+            let ctx = AssignCtx {
+                job: &js.job,
+                dfg,
+                task,
+                planned: js.adfg.get(task),
+                pred_outputs: &pred_outputs,
+            };
+            (pred_outputs.clone(), self.scheduler.assign(&ctx, &view))
+        };
+
+        self.jobs[job_idx].adfg.set(task, target);
+
+        // ADFG dispatch message (tiny) to the target worker.
+        let delta = self.cfg.cost.delta_net_us;
+        let enq_at = if target == on_worker { self.now } else { self.now + delta };
+        self.push_event(enq_at, Event::TaskEnqueue { w: target, job_idx, task });
+
+        // Ship every not-yet-sent input to the target.
+        let dfg_idx = self.jobs[job_idx].job.kind.index();
+        let preds = self.dfgs[dfg_idx].preds[task].clone();
+        if preds.is_empty() {
+            let td = self.cfg.cost.td_input(pred_outputs[0].1, on_worker, target);
+            self.push_event(self.now + td, Event::InputArrive { job_idx, task });
+        } else {
+            for &p in &preds {
+                let slot =
+                    self.dfgs[dfg_idx].succs[p].iter().position(|&s| s == task).unwrap();
+                if self.jobs[job_idx].sent[p][slot] {
+                    continue;
+                }
+                self.jobs[job_idx].sent[p][slot] = true;
+                let src = self.jobs[job_idx].output_worker[p].unwrap();
+                let bytes = self.dfgs[dfg_idx].vertices[p].output_bytes;
+                let td = self.cfg.cost.td_input(bytes, src, target);
+                self.push_event(self.now + td, Event::InputArrive { job_idx, task });
+            }
+        }
+    }
+
+    fn handle_job_arrival(&mut self, job_idx: usize) {
+        // The client sends the request to an arbitrary ("ingress") worker.
+        let ingress =
+            (hash_pair(self.jobs[job_idx].job.id, INGRESS_SALT) % self.cfg.n_workers as u64)
+                as WorkerId;
+        self.view_rows(ingress);
+        let adfg = {
+            let js = &self.jobs[job_idx];
+            let dfg = &self.dfgs[js.job.kind.index()];
+            let view = ClusterView {
+                now: self.now,
+                self_worker: ingress,
+                rows: &self.rows_scratch,
+                cost: &self.cfg.cost,
+                speed: &self.speed,
+            };
+            // Planning phase: the initial ADFG (§4.2).
+            self.scheduler.plan(&js.job, dfg, &view)
+        };
+        self.jobs[job_idx].adfg = adfg;
+        // The entry task is dispatchable immediately.
+        let entry = self.dfgs[self.jobs[job_idx].job.kind.index()].entry;
+        self.assign_and_dispatch(job_idx, entry, ingress);
+    }
+
+    fn handle_exec_done(&mut self, w: WorkerId, job_idx: usize, task: TaskId) {
+        let finished = self.workers[w].finish_task(self.now);
+        let dfg_idx = self.jobs[job_idx].job.kind.index();
+        // Online profile refinement (§3.1): feed the observed runtime back
+        // so R(t, ·) estimates converge even when the static profile lies.
+        if let Some(repo) = &mut self.profiles {
+            let kind = self.jobs[job_idx].job.kind;
+            // De-bias by worker speed: profiles store reference runtimes.
+            let observed = (finished.runtime_us as f64 / self.speed[w].max(1e-9)) as Micros;
+            repo.observe(kind, task, observed);
+            self.dfgs[dfg_idx].vertices[task].mean_runtime_us = repo.runtime(kind, task);
+        }
+        let (exit, succs) = {
+            let d = &self.dfgs[dfg_idx];
+            (d.exit, d.succs[task].clone())
+        };
+        {
+            let js = &mut self.jobs[job_idx];
+            js.done[task] = true;
+            js.output_worker[task] = Some(w);
+        }
+
+        if task == exit {
+            self.jobs[job_idx].completed = true;
+            self.completed_jobs += 1;
+            let js = &self.jobs[job_idx];
+            self.records.push(JobRecord {
+                kind: js.job.kind,
+                arrival_us: js.job.arrival_us,
+                completion_us: self.now,
+                lower_bound_us: self.dfgs[dfg_idx].lower_bound_us,
+            });
+        }
+
+        for (slot, &s) in succs.iter().enumerate() {
+            self.jobs[job_idx].remaining_preds[s] -= 1;
+            if self.jobs[job_idx].remaining_preds[s] == 0 {
+                // Last predecessor done: (re-)assign and dispatch.
+                self.assign_and_dispatch(job_idx, s, w);
+            } else if self.dfgs[dfg_idx].is_join(s) {
+                // Join with a pre-coordinated placement: ship this output
+                // early (the planning-phase benefit, §3.2). Join placements
+                // are never dynamically adjusted, so this is safe.
+                if let Some(target) = self.jobs[job_idx].adfg.get(s) {
+                    if !self.jobs[job_idx].sent[task][slot] {
+                        self.jobs[job_idx].sent[task][slot] = true;
+                        let bytes = self.dfgs[dfg_idx].vertices[task].output_bytes;
+                        let td = self.cfg.cost.td_input(bytes, w, target);
+                        self.push_event(self.now + td, Event::InputArrive { job_idx, task: s });
+                    }
+                }
+            }
+        }
+
+        self.try_dispatch(w);
+    }
+
+    /// The Task Dispatcher loop (§3.2): trigger at most one model fetch
+    /// (earliest input-ready task whose model is absent; PCIe is serial),
+    /// then start the first runnable task if the GPU is idle. Tasks whose
+    /// inputs or models aren't ready are left in place and the scan
+    /// continues — fetch thus overlaps execution of later tasks.
+    fn try_dispatch(&mut self, w: WorkerId) {
+        let now = self.now;
+        let mut fetch: Option<(usize, ModelId)> = None;
+        let mut start: Option<(usize, usize, TaskId, Micros, bool, Option<ModelId>)> = None;
+        {
+            let jobs = &self.jobs;
+            let dfgs = &self.dfgs;
+            let worker = &self.workers[w];
+            let can_fetch = worker.fetching().is_none();
+            let can_start = worker.running().is_none();
+            let queue = worker.queue();
+            // Built lazily: most dispatch scans trigger no fetch, and this
+            // allocation dominated the event loop before being deferred.
+            let mut lookahead_models: Option<Vec<ModelId>> = None;
+            for (i, qt) in queue.iter().enumerate() {
+                let js = &jobs[qt.job_idx];
+                let dfg = &dfgs[js.job.kind.index()];
+                if js.done[qt.task] {
+                    continue;
+                }
+                if js.inputs_arrived[qt.task] < js.needed_inputs(dfg, qt.task) {
+                    continue;
+                }
+                match qt.model {
+                    Some(m) if !worker.gpu.contains(m) => {
+                        if can_fetch && fetch.is_none() {
+                            // Eviction decision sees the models queued from
+                            // here onward (§5.3.2 queue-lookahead).
+                            let la = lookahead_models.get_or_insert_with(|| {
+                                queue.iter().filter_map(|q| q.model).collect()
+                            });
+                            if worker.gpu.plan_eviction(model_bytes(m), la).is_some() {
+                                fetch = Some((i, m));
+                            }
+                        }
+                        // Not runnable; dispatcher proceeds to next task.
+                    }
+                    model => {
+                        if can_start && start.is_none() {
+                            let end = now + qt.runtime_us;
+                            start =
+                                Some((i, qt.job_idx, qt.task, end, qt.caused_fetch, model));
+                        }
+                    }
+                }
+                if start.is_some() && (fetch.is_some() || !can_fetch) {
+                    break;
+                }
+            }
+        }
+
+        if let Some((i, m)) = fetch {
+            // Re-plan eviction with mutable access and execute it.
+            let lookahead: Vec<ModelId> =
+                self.workers[w].queue().iter().filter_map(|q| q.model).collect();
+            let victims = self.workers[w]
+                .gpu
+                .plan_eviction(model_bytes(m), &lookahead)
+                .expect("eviction plan vanished");
+            for v in victims {
+                self.workers[w].gpu.evict(v, now);
+            }
+            self.workers[w].gpu.record_miss();
+            self.workers[w].mark_caused_fetch(i);
+            self.workers[w].begin_fetch(m);
+            let td = self.cfg.cost.td_model(model_bytes(m));
+            self.push_event(now + td, Event::FetchDone { w, model: m });
+        }
+
+        if let Some((mut i, job_idx, task, end, caused_fetch, model)) = start {
+            if model.is_some() && !caused_fetch {
+                self.workers[w].gpu.record_hit();
+            }
+            // The fetch marking above didn't reorder the queue, so index i
+            // is still valid (eviction doesn't touch the queue).
+            debug_assert_eq!(self.workers[w].queue()[i].task, task);
+            let _ = &mut i;
+            self.workers[w].start_task(i, now, end);
+            self.push_event(end, Event::ExecDone { w, job_idx, task });
+        }
+    }
+
+    fn handle_enqueue(&mut self, w: WorkerId, job_idx: usize, task: TaskId) {
+        let (base, model) = {
+            let k = self.jobs[job_idx].job.kind.index();
+            // Actual work follows the ground truth, not the profile claim.
+            (
+                (self.true_runtimes[k][task] * self.speed[w]).max(1.0),
+                self.dfgs[k].vertices[task].model,
+            )
+        };
+        let mut runtime = self.workers[w].sample_runtime(base, self.cfg.runtime_jitter);
+        // Straggler fault injection: some tasks unpredictably blow through
+        // their profile (the §3.2 motivation for dynamic adjustment).
+        if self.cfg.straggler_prob > 0.0
+            && self.workers[w].roll_straggler(self.cfg.straggler_prob)
+        {
+            runtime = (runtime as f64 * self.cfg.straggler_factor) as Micros;
+        }
+        self.workers[w].enqueue(QTask {
+            job_idx,
+            task,
+            model,
+            runtime_us: runtime,
+            caused_fetch: false,
+        });
+        self.try_dispatch(w);
+    }
+
+    /// Run the full workload to completion; returns metrics.
+    pub fn run(&mut self, jobs: Vec<Job>) -> SimReport {
+        for job in jobs {
+            let kind = job.kind;
+            let arrival = job.arrival_us;
+            let js = JobState::new(job, &self.dfgs[kind.index()]);
+            let idx = self.jobs.len();
+            self.jobs.push(js);
+            self.push_event(arrival, Event::JobArrival { job_idx: idx });
+        }
+        for w in 0..self.cfg.n_workers {
+            self.push_event(0, Event::PushLoad { w });
+            self.push_event(0, Event::PushCache { w });
+        }
+
+        const MAX_EVENTS: u64 = 500_000_000;
+        while let Some(Reverse((at, _, ev))) = self.heap.pop() {
+            debug_assert!(at >= self.now, "time went backwards");
+            self.now = at;
+            self.events_processed += 1;
+            assert!(
+                self.events_processed <= MAX_EVENTS,
+                "simulation exceeded {MAX_EVENTS} events — livelock?"
+            );
+            match ev {
+                Event::JobArrival { job_idx } => self.handle_job_arrival(job_idx),
+                Event::TaskEnqueue { w, job_idx, task } => self.handle_enqueue(w, job_idx, task),
+                Event::InputArrive { job_idx, task } => {
+                    self.jobs[job_idx].inputs_arrived[task] += 1;
+                    if let Some(w) = self.jobs[job_idx].adfg.get(task) {
+                        self.try_dispatch(w);
+                    }
+                }
+                Event::FetchDone { w, model } => {
+                    self.workers[w].finish_fetch(model, self.now);
+                    self.try_dispatch(w);
+                }
+                Event::ExecDone { w, job_idx, task } => self.handle_exec_done(w, job_idx, task),
+                Event::PushLoad { w } => {
+                    let ft = self.workers[w].ft_estimate(self.now);
+                    self.sst.push_load(w, ft, self.now);
+                    if self.completed_jobs < self.jobs.len() {
+                        let at = self.now + self.cfg.push.load_interval_us;
+                        self.push_event(at, Event::PushLoad { w });
+                    }
+                }
+                Event::PushCache { w } => {
+                    let (bitmap, free) = {
+                        let g = &self.workers[w].gpu;
+                        (g.bitmap(), g.free_bytes())
+                    };
+                    self.sst.push_cache(w, bitmap, free, self.now);
+                    if self.completed_jobs < self.jobs.len() {
+                        let at = self.now + self.cfg.push.cache_interval_us;
+                        self.push_event(at, Event::PushCache { w });
+                    }
+                }
+            }
+        }
+
+        let span = self.now;
+        let workers: Vec<WorkerMetrics> =
+            self.workers.iter_mut().map(|wk| wk.metrics(span)).collect();
+        SimReport {
+            metrics: MetricsSink {
+                jobs: self.records.clone(),
+                workers,
+                span_us: span,
+                incomplete: self.jobs.len() - self.completed_jobs,
+            },
+            events_processed: self.events_processed,
+            sim_span_us: span,
+        }
+    }
+
+    /// Convenience: build, run, report.
+    pub fn simulate(cfg: ClusterConfig, jobs: Vec<Job>) -> SimReport {
+        Simulator::new(cfg).run(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerKind;
+    use crate::core::SEC;
+    use crate::dfg::PipelineKind;
+    use crate::workload;
+
+    fn one_job(kind: PipelineKind) -> Vec<Job> {
+        vec![Job { id: 0, kind, arrival_us: 0, input_bytes: 1000 }]
+    }
+
+    #[test]
+    fn single_job_completes_near_lower_bound() {
+        for kind in PipelineKind::ALL {
+            let cfg = ClusterConfig::default();
+            let rep = Simulator::simulate(cfg, one_job(kind));
+            assert_eq!(rep.metrics.jobs.len(), 1, "{kind:?}");
+            let sd = rep.metrics.jobs[0].slowdown();
+            // Cold caches mean model fetches; still within a small factor.
+            assert!(sd >= 0.6 && sd < 4.0, "{kind:?} slowdown={sd}");
+        }
+    }
+
+    #[test]
+    fn all_schedulers_complete_all_jobs() {
+        let jobs = workload::poisson(1.0, 40, &[], 11);
+        for kind in SchedulerKind::ALL {
+            let cfg = ClusterConfig::default().with_scheduler(kind);
+            let rep = Simulator::simulate(cfg, jobs.clone());
+            assert_eq!(rep.metrics.jobs.len(), 40, "{kind:?}");
+            assert_eq!(rep.metrics.incomplete, 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let jobs = workload::poisson(2.0, 60, &[], 5);
+        let a = Simulator::simulate(ClusterConfig::default(), jobs.clone());
+        let b = Simulator::simulate(ClusterConfig::default(), jobs);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.sim_span_us, b.sim_span_us);
+        let la: Vec<_> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<_> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn warm_cache_beats_cold() {
+        // Second identical job should be faster: model already resident.
+        let jobs = vec![
+            Job { id: 0, kind: PipelineKind::Vpa, arrival_us: 0, input_bytes: 100 },
+            Job { id: 1, kind: PipelineKind::Vpa, arrival_us: 20 * SEC, input_bytes: 100 },
+        ];
+        let rep = Simulator::simulate(ClusterConfig::default(), jobs);
+        let l0 = rep.metrics.jobs[0].latency_us();
+        let l1 = rep.metrics.jobs[1].latency_us();
+        assert!(l1 < l0, "warm {l1} !< cold {l0}");
+    }
+
+    #[test]
+    fn slowdown_grows_with_load() {
+        let low = Simulator::simulate(
+            ClusterConfig::default(),
+            workload::poisson(0.5, 60, &[], 7),
+        );
+        let high = Simulator::simulate(
+            ClusterConfig::default(),
+            workload::poisson(4.0, 60, &[], 7),
+        );
+        assert!(
+            high.metrics.mean_slowdown() > low.metrics.mean_slowdown(),
+            "high {} !> low {}",
+            high.metrics.mean_slowdown(),
+            low.metrics.mean_slowdown()
+        );
+    }
+
+    #[test]
+    fn metrics_are_populated() {
+        let rep = Simulator::simulate(
+            ClusterConfig::default(),
+            workload::poisson(1.0, 30, &[], 9),
+        );
+        let m = &rep.metrics;
+        assert!(m.gpu_utilization() > 0.0);
+        assert!(m.gpu_memory_utilization() > 0.0);
+        assert!(m.gpu_energy_joules() > 0.0);
+        assert!(m.cache_hit_rate() > 0.0);
+        assert!(m.active_workers() >= 1);
+        assert!(rep.events_processed > 0);
+    }
+}

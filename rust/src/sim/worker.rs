@@ -1,0 +1,211 @@
+//! Per-worker simulation state: execution queue, GPU cache, fetch/execute
+//! occupancy, busy-time accounting, and the live SST row.
+
+use crate::config::ClusterConfig;
+use crate::core::{Micros, ModelId, TaskId, WorkerId};
+use crate::gpu::GpuCache;
+use crate::metrics::{BusyTracker, WorkerMetrics};
+use crate::sst::SstRow;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// A task instance sitting on (or running from) a worker's execution queue.
+#[derive(Debug, Clone)]
+pub struct QTask {
+    pub job_idx: usize,
+    pub task: TaskId,
+    pub model: Option<ModelId>,
+    /// Sampled actual runtime for this instance (jittered around R(t,w)).
+    pub runtime_us: Micros,
+    /// Set when this task triggered the in-flight model fetch (for cache
+    /// hit/miss accounting).
+    pub caused_fetch: bool,
+}
+
+pub struct SimWorker {
+    pub id: WorkerId,
+    pub gpu: GpuCache,
+    queue: VecDeque<QTask>,
+    running: Option<QTask>,
+    exec_end: Micros,
+    fetching: Option<ModelId>,
+    busy: BusyTracker,
+    executed: u64,
+    rng: Rng,
+}
+
+impl SimWorker {
+    pub fn new(id: WorkerId, cfg: &ClusterConfig, rng: Rng) -> SimWorker {
+        SimWorker {
+            id,
+            gpu: GpuCache::new(cfg.gpu_capacity, cfg.eviction),
+            queue: VecDeque::new(),
+            running: None,
+            exec_end: 0,
+            fetching: None,
+            busy: BusyTracker::default(),
+            executed: 0,
+            rng,
+        }
+    }
+
+    pub fn queue(&self) -> &VecDeque<QTask> {
+        &self.queue
+    }
+
+    pub fn running(&self) -> Option<&QTask> {
+        self.running.as_ref()
+    }
+
+    pub fn fetching(&self) -> Option<ModelId> {
+        self.fetching
+    }
+
+    pub fn enqueue(&mut self, qt: QTask) {
+        self.queue.push_back(qt);
+    }
+
+    pub fn mark_caused_fetch(&mut self, idx: usize) {
+        self.queue[idx].caused_fetch = true;
+    }
+
+    pub fn begin_fetch(&mut self, m: ModelId) {
+        debug_assert!(self.fetching.is_none());
+        self.fetching = Some(m);
+    }
+
+    pub fn finish_fetch(&mut self, m: ModelId, now: Micros) {
+        debug_assert_eq!(self.fetching, Some(m));
+        self.fetching = None;
+        self.gpu.insert(m, now);
+    }
+
+    /// Pop queue[idx] and start executing it; pins its model.
+    pub fn start_task(&mut self, idx: usize, now: Micros, end: Micros) -> &QTask {
+        let qt = self.queue.remove(idx).expect("start_task index");
+        if let Some(m) = qt.model {
+            self.gpu.pin(m);
+        }
+        self.busy.start(now);
+        self.exec_end = end;
+        self.executed += 1;
+        self.running = Some(qt);
+        self.running.as_ref().unwrap()
+    }
+
+    pub fn finish_task(&mut self, now: Micros) -> QTask {
+        let qt = self.running.take().expect("finish without running");
+        if let Some(m) = qt.model {
+            self.gpu.unpin(m);
+        }
+        self.busy.stop(now);
+        qt
+    }
+
+    /// Sample the actual runtime for a new task instance around `base` µs.
+    pub fn sample_runtime(&mut self, base: f64, rel_std: f64) -> Micros {
+        self.rng.jitter(base, rel_std, 100.0) as Micros
+    }
+
+    /// Fault-injection roll: does this task straggle?
+    pub fn roll_straggler(&mut self, prob: f64) -> bool {
+        self.rng.f64() < prob
+    }
+
+    /// FT(w): absolute time at which everything currently here finishes
+    /// (running task remainder + all queued runtimes), §4.1.
+    pub fn ft_estimate(&self, now: Micros) -> Micros {
+        let base = if self.running.is_some() { self.exec_end.max(now) } else { now };
+        base + self.queue.iter().map(|q| q.runtime_us).sum::<Micros>()
+    }
+
+    /// The worker's own live SST row (always current for itself).
+    pub fn live_row(&self, now: Micros) -> SstRow {
+        SstRow {
+            ft_us: self.ft_estimate(now),
+            cache_bitmap: self.gpu.bitmap(),
+            free_cache_bytes: self.gpu.free_bytes(),
+            load_pushed_at: now,
+            cache_pushed_at: now,
+        }
+    }
+
+    pub fn metrics(&mut self, span: Micros) -> WorkerMetrics {
+        self.gpu.advance_time(span);
+        let s = self.gpu.stats;
+        WorkerMetrics {
+            busy_us: self.busy.total(span),
+            hits: s.hits,
+            misses: s.misses,
+            fetches: s.fetches,
+            evictions: s.evictions,
+            cache_byte_time: s.byte_time_integral,
+            gpu_capacity: self.gpu.capacity(),
+            active: self.executed > 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MS;
+
+    fn worker() -> SimWorker {
+        SimWorker::new(0, &ClusterConfig::default(), Rng::new(1))
+    }
+
+    fn qt(task: TaskId, model: Option<ModelId>, rt: Micros) -> QTask {
+        QTask { job_idx: 0, task, model, runtime_us: rt, caused_fetch: false }
+    }
+
+    #[test]
+    fn ft_estimate_sums_queue() {
+        let mut w = worker();
+        w.enqueue(qt(0, None, 100 * MS));
+        w.enqueue(qt(1, None, 50 * MS));
+        assert_eq!(w.ft_estimate(1000), 1000 + 150 * MS);
+    }
+
+    #[test]
+    fn ft_includes_running_remainder() {
+        let mut w = worker();
+        w.enqueue(qt(0, None, 100 * MS));
+        w.start_task(0, 0, 100 * MS);
+        w.enqueue(qt(1, None, 50 * MS));
+        // At t=30ms: running until 100ms, then 50ms queued.
+        assert_eq!(w.ft_estimate(30 * MS), 150 * MS);
+    }
+
+    #[test]
+    fn start_finish_roundtrip_pins() {
+        use crate::dfg::models::OPT;
+        let mut w = worker();
+        w.gpu.insert(OPT, 0);
+        w.enqueue(qt(0, Some(OPT), 10 * MS));
+        w.start_task(0, 0, 10 * MS);
+        // Pinned: eviction planning must refuse to evict OPT.
+        assert!(w.gpu.plan_eviction(w.gpu.capacity(), &[]).is_none());
+        w.finish_task(10 * MS);
+        assert!(w.running().is_none());
+    }
+
+    #[test]
+    fn live_row_reflects_cache() {
+        use crate::dfg::models::BART;
+        let mut w = worker();
+        w.gpu.insert(BART, 0);
+        let row = w.live_row(5);
+        assert_eq!(row.cache_bitmap, 1 << BART);
+        assert_eq!(row.ft_us, 5);
+    }
+
+    #[test]
+    fn sampled_runtime_near_base() {
+        let mut w = worker();
+        for _ in 0..100 {
+            let r = w.sample_runtime(1_000_000.0, 0.1);
+            assert!((700_000..=1_300_000).contains(&r), "r={r}");
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Shared State Table — the decentralized Global State Monitor (§3.4, §5.2).
+//!
+//! One cache-line-sized row per worker, replicated to all peers. A worker
+//! updates its *live* state continuously but only *pushes* (publishes) at a
+//! rate-limited interval; peers therefore see each row with bounded
+//! staleness equal to the push interval. The paper separates two kinds of
+//! state — queue-load (finish-time estimate) and GPU cache contents
+//! (bitmap + free bytes) — and Figure 8 varies their push rates on
+//! independent axes, so we keep two independent push timers per row.
+
+use crate::core::{Micros, WorkerId};
+
+/// The published, cache-line-sized row (paper Figure 5): fits in 64 bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SstRow {
+    /// FT(w): estimated absolute time at which all tasks currently on the
+    /// worker's execution queue will have finished, µs.
+    pub ft_us: Micros,
+    /// Cache bitmap: bit i set ⇔ model i resident in the Navigator cache.
+    pub cache_bitmap: u64,
+    /// AVC(w): free Navigator-cache bytes.
+    pub free_cache_bytes: u64,
+    /// Push timestamps (diagnostics / staleness accounting).
+    pub load_pushed_at: Micros,
+    pub cache_pushed_at: Micros,
+}
+
+/// Whole-cluster SST: the *published* view every worker replicates.
+///
+/// In the live coordinator this sits behind a lock updated only by push
+/// events (mimicking the RDMA row writes); in the simulator push events
+/// copy live worker state in. Readers always go through `row()` /
+/// `rows()` — they can never observe un-pushed state of a peer.
+#[derive(Debug, Clone)]
+pub struct Sst {
+    rows: Vec<SstRow>,
+}
+
+impl Sst {
+    pub fn new(n_workers: usize) -> Sst {
+        Sst { rows: vec![SstRow::default(); n_workers] }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn row(&self, w: WorkerId) -> &SstRow {
+        &self.rows[w]
+    }
+
+    pub fn rows(&self) -> &[SstRow] {
+        &self.rows
+    }
+
+    /// Push the load half of a row (FT estimate).
+    pub fn push_load(&mut self, w: WorkerId, ft_us: Micros, now: Micros) {
+        let r = &mut self.rows[w];
+        r.ft_us = ft_us;
+        r.load_pushed_at = now;
+    }
+
+    /// Push the cache half of a row (bitmap + free bytes).
+    pub fn push_cache(&mut self, w: WorkerId, bitmap: u64, free_bytes: u64, now: Micros) {
+        let r = &mut self.rows[w];
+        r.cache_bitmap = bitmap;
+        r.free_cache_bytes = free_bytes;
+        r.cache_pushed_at = now;
+    }
+
+    /// Worst-case load-information staleness across peers as seen at `now`.
+    pub fn max_load_staleness(&self, now: Micros) -> Micros {
+        self.rows.iter().map(|r| now.saturating_sub(r.load_pushed_at)).max().unwrap_or(0)
+    }
+}
+
+/// Push-rate limiter configuration (§5.2: experiments justify 5 pushes/s;
+/// Figure 8 sweeps both axes).
+#[derive(Debug, Clone, Copy)]
+pub struct PushConfig {
+    /// Interval between load (FT) pushes, µs.
+    pub load_interval_us: Micros,
+    /// Interval between cache (bitmap/free) pushes, µs.
+    pub cache_interval_us: Micros,
+}
+
+impl Default for PushConfig {
+    fn default() -> Self {
+        // 5 pushes/s = 200 ms, the paper's chosen operating point.
+        PushConfig { load_interval_us: 200_000, cache_interval_us: 200_000 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_start_empty() {
+        let sst = Sst::new(3);
+        assert_eq!(sst.n_workers(), 3);
+        assert_eq!(sst.row(1).cache_bitmap, 0);
+    }
+
+    #[test]
+    fn pushes_are_independent_halves() {
+        let mut sst = Sst::new(2);
+        sst.push_load(0, 500, 100);
+        sst.push_cache(0, 0b101, 7, 200);
+        let r = sst.row(0);
+        assert_eq!(r.ft_us, 500);
+        assert_eq!(r.cache_bitmap, 0b101);
+        assert_eq!(r.load_pushed_at, 100);
+        assert_eq!(r.cache_pushed_at, 200);
+    }
+
+    #[test]
+    fn reader_sees_only_pushed_state() {
+        // The SST has no API to read anything that wasn't pushed: updating
+        // live worker state elsewhere cannot leak here. Push, then verify
+        // the old value persists until the next push.
+        let mut sst = Sst::new(1);
+        sst.push_load(0, 1000, 0);
+        // (live FT changes to 2000 at t=50, but no push happens)
+        assert_eq!(sst.row(0).ft_us, 1000);
+        sst.push_load(0, 2000, 200_000);
+        assert_eq!(sst.row(0).ft_us, 2000);
+    }
+
+    #[test]
+    fn staleness_bound() {
+        let mut sst = Sst::new(2);
+        sst.push_load(0, 0, 100);
+        sst.push_load(1, 0, 300);
+        assert_eq!(sst.max_load_staleness(500), 400);
+    }
+
+    #[test]
+    fn default_push_config_is_5_per_second() {
+        let c = PushConfig::default();
+        assert_eq!(c.load_interval_us, 200_000);
+    }
+
+    #[test]
+    fn row_is_cacheline_sized() {
+        // §5.2: the row must squeeze into a 64-byte cache line for atomic
+        // RDMA pushes.
+        assert!(std::mem::size_of::<SstRow>() <= 64);
+    }
+}

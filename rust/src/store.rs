@@ -1,0 +1,137 @@
+//! Cascade-like object store substrate (§5, §5.1.2).
+//!
+//! Objects are variable-length byte vectors named by path; each has a small
+//! set of home servers chosen by randomized hash placement within shards of
+//! size 2–3. Access is free on a home server; otherwise a network transfer
+//! is charged per the Fig. 4 cost model. The live coordinator stores ML
+//! model blobs and intermediate outputs here; the scheduler consumes only
+//! the access-cost estimates.
+
+use crate::core::{fnv1a, Micros, WorkerId};
+use crate::net::CostModel;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct StoredObject {
+    pub bytes: u64,
+    pub payload: Option<Vec<u8>>,
+}
+
+#[derive(Debug)]
+pub struct ObjectStore {
+    n_workers: usize,
+    shard_size: usize,
+    objects: HashMap<String, StoredObject>,
+}
+
+impl ObjectStore {
+    pub fn new(n_workers: usize, shard_size: usize) -> ObjectStore {
+        assert!(shard_size >= 1);
+        ObjectStore { n_workers, shard_size: shard_size.min(n_workers), objects: HashMap::new() }
+    }
+
+    /// Home nodes for a key: `shard_size` distinct workers from the key hash
+    /// (Cascade's randomized hash-based placement).
+    pub fn home_nodes(&self, key: &str) -> Vec<WorkerId> {
+        let h = fnv1a(key.as_bytes());
+        let mut homes = Vec::with_capacity(self.shard_size);
+        let mut i = 0u64;
+        while homes.len() < self.shard_size {
+            let w = (crate::core::hash_pair(h, i) % self.n_workers as u64) as WorkerId;
+            if !homes.contains(&w) {
+                homes.push(w);
+            }
+            i += 1;
+        }
+        homes
+    }
+
+    pub fn is_home(&self, key: &str, w: WorkerId) -> bool {
+        self.home_nodes(key).contains(&w)
+    }
+
+    pub fn put(&mut self, key: &str, bytes: u64, payload: Option<Vec<u8>>) {
+        self.objects.insert(key.to_string(), StoredObject { bytes, payload });
+    }
+
+    pub fn get(&self, key: &str) -> Option<&StoredObject> {
+        self.objects.get(key)
+    }
+
+    /// Estimated access cost from worker `from` (Fig. 4): free if local
+    /// (home node), one network transfer otherwise.
+    pub fn access_cost(&self, key: &str, from: WorkerId, cost: &CostModel) -> Option<Micros> {
+        let obj = self.objects.get(key)?;
+        Some(if self.is_home(key, from) { 0 } else { cost.td_transfer(obj.bytes) })
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MB;
+
+    #[test]
+    fn home_nodes_distinct_and_in_range() {
+        let s = ObjectStore::new(6, 3);
+        for key in ["a", "model/opt", "job/42/out"] {
+            let homes = s.home_nodes(key);
+            assert_eq!(homes.len(), 3);
+            let mut uniq = homes.clone();
+            uniq.dedup();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "{homes:?}");
+            assert!(homes.iter().all(|&w| w < 6));
+        }
+    }
+
+    #[test]
+    fn placement_deterministic() {
+        let s = ObjectStore::new(8, 2);
+        assert_eq!(s.home_nodes("k"), s.home_nodes("k"));
+    }
+
+    #[test]
+    fn placement_spreads_keys() {
+        let s = ObjectStore::new(8, 2);
+        let mut hit = vec![false; 8];
+        for i in 0..200 {
+            for w in s.home_nodes(&format!("key-{i}")) {
+                hit[w] = true;
+            }
+        }
+        assert!(hit.iter().all(|&h| h), "some worker never a home: {hit:?}");
+    }
+
+    #[test]
+    fn access_free_on_home() {
+        let mut s = ObjectStore::new(4, 2);
+        s.put("obj", 10 * MB, None);
+        let cost = CostModel::default();
+        let homes = s.home_nodes("obj");
+        assert_eq!(s.access_cost("obj", homes[0], &cost), Some(0));
+        let other = (0..4).find(|w| !homes.contains(w)).unwrap();
+        assert!(s.access_cost("obj", other, &cost).unwrap() > 0);
+    }
+
+    #[test]
+    fn missing_object_is_none() {
+        let s = ObjectStore::new(4, 2);
+        assert_eq!(s.access_cost("nope", 0, &CostModel::default()), None);
+    }
+
+    #[test]
+    fn shard_size_clamped_to_cluster() {
+        let s = ObjectStore::new(2, 3);
+        assert_eq!(s.home_nodes("x").len(), 2);
+    }
+}

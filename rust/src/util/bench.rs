@@ -1,0 +1,122 @@
+//! Micro/endto-end bench harness (in-tree replacement for `criterion`).
+//!
+//! `cargo bench` invokes our `harness = false` bench binaries, which drive
+//! this module: warmup, timed iterations, and a median/mean/p95 report in a
+//! stable single-line format that EXPERIMENTS.md quotes directly.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    warmup: Duration,
+    min_iters: u32,
+    target: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(200),
+            min_iters: 10,
+            target: Duration::from_secs(2),
+        }
+    }
+
+    pub fn quick(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(20),
+            min_iters: 3,
+            target: Duration::from_millis(400),
+        }
+    }
+
+    /// Time `f` repeatedly; the closure should return something observable
+    /// (guards against the optimizer deleting the work).
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchReport {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed samples.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while samples_ns.len() < self.min_iters as usize || start.elapsed() < self.target {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 100_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let report = BenchReport {
+            name: self.name.clone(),
+            iters: n as u32,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            median_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: samples_ns[0],
+        };
+        println!("{}", report.render());
+        report
+    }
+}
+
+impl BenchReport {
+    pub fn render(&self) -> String {
+        format!(
+            "bench {:<44} iters={:<7} median={:>12} mean={:>12} p95={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let r = Bench::quick("noop").run(|| 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(10.0).ends_with("ns"));
+        assert!(fmt_ns(10_000.0).ends_with("µs"));
+        assert!(fmt_ns(10_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+}

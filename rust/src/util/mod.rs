@@ -1,0 +1,16 @@
+//! In-tree substrate utilities.
+//!
+//! The build environment is fully offline with only `xla` + `anyhow`
+//! vendored, so the support crates a project like this would normally pull
+//! in (rand, serde_json, clap, criterion, proptest) are implemented here
+//! from scratch: a deterministic RNG with the distributions the workload
+//! generators need, a minimal JSON parser for the artifact manifest, a
+//! stats/percentile kit, a tiny argv parser, and a property-test driver.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,129 @@
+//! Descriptive statistics for experiment reporting: percentiles, box-plot
+//! summaries (matching the paper's Figure 6 box semantics), and means.
+
+/// Five-number box-plot summary plus whiskers as drawn in the paper's
+/// Figure 6: box = [Q1, Q3], whiskers at 1.5 IQR, the rest outliers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub n: usize,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub whisker_lo: f64,
+    pub whisker_hi: f64,
+    pub outliers: usize,
+    pub mean: f64,
+}
+
+/// Linear-interpolation percentile on a *sorted* slice, p in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Percentile of an unsorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+impl BoxStats {
+    pub fn from(xs: &[f64]) -> BoxStats {
+        assert!(!xs.is_empty(), "BoxStats of empty sample");
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = percentile_sorted(&v, 25.0);
+        let q3 = percentile_sorted(&v, 75.0);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = v.iter().copied().find(|&x| x >= lo_fence).unwrap_or(v[0]);
+        let whisker_hi = v.iter().rev().copied().find(|&x| x <= hi_fence).unwrap_or(v[v.len() - 1]);
+        let outliers = v.iter().filter(|&&x| x < whisker_lo || x > whisker_hi).count();
+        BoxStats {
+            n: v.len(),
+            min: v[0],
+            q1,
+            median: percentile_sorted(&v, 50.0),
+            q3,
+            max: v[v.len() - 1],
+            whisker_lo,
+            whisker_hi,
+            outliers,
+            mean: mean(&v),
+        }
+    }
+
+    /// One-line rendering for experiment tables.
+    pub fn render(&self) -> String {
+        format!(
+            "n={:<5} min={:7.2} q1={:7.2} med={:7.2} q3={:7.2} max={:8.2} out={}",
+            self.n, self.min, self.q1, self.median, self.q3, self.max, self.outliers
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&v, 25.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 75.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_quartiles_ordered() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let b = BoxStats::from(&xs);
+        assert!(b.min <= b.q1 && b.q1 <= b.median && b.median <= b.q3 && b.q3 <= b.max);
+        assert_eq!(b.n, 100);
+        assert_eq!(b.outliers, 0);
+    }
+
+    #[test]
+    fn box_stats_detects_outlier() {
+        let mut xs: Vec<f64> = (0..99).map(|i| 1.0 + (i as f64) * 0.01).collect();
+        xs.push(1000.0);
+        let b = BoxStats::from(&xs);
+        assert!(b.outliers >= 1);
+        assert!(b.whisker_hi < 1000.0);
+    }
+
+    #[test]
+    fn mean_median_single() {
+        assert_eq!(mean(&[4.0]), 4.0);
+        assert_eq!(median(&[4.0]), 4.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Workload generation: Poisson mixed request streams (§6.2), input-size
+//! sampling standing in for GLUE/COCO inputs, and an Alibaba-like bursty
+//! production trace synthesizer (§6.4 substitution — see DESIGN.md §3).
+
+use crate::core::{Micros, JobId, KB, SEC};
+use crate::dfg::{Job, PipelineKind};
+use crate::util::rng::Rng;
+
+/// Sample an input size for a pipeline kind: text pipelines draw
+/// GLUE-sentence-scale payloads, vision pipelines COCO-image-scale ones.
+pub fn sample_input_bytes(kind: PipelineKind, rng: &mut Rng) -> u64 {
+    match kind {
+        // GLUE text: a few hundred bytes to a few KB.
+        PipelineKind::Translation | PipelineKind::Vpa => {
+            (rng.lognormal(6.5, 0.8) as u64).clamp(64, 16 * KB)
+        }
+        // COCO images: ~50-500 KB JPEG.
+        PipelineKind::ImageCaption | PipelineKind::Perception => {
+            (rng.lognormal(11.9, 0.5) as u64).clamp(20 * KB, 2_000 * KB)
+        }
+    }
+}
+
+/// A Poisson stream of `n_jobs` requests at `rate_per_s`, with kinds drawn
+/// from `mix` (weights per `PipelineKind::ALL` order; uniform if empty).
+pub fn poisson(rate_per_s: f64, n_jobs: usize, mix: &[f64], seed: u64) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    let weights: Vec<f64> =
+        if mix.is_empty() { vec![1.0; 4] } else { mix.to_vec() };
+    let mut t = 0.0f64;
+    let mut jobs = Vec::with_capacity(n_jobs);
+    for id in 0..n_jobs {
+        t += rng.exp(rate_per_s);
+        let kind = PipelineKind::from_index(rng.weighted(&weights));
+        jobs.push(Job {
+            id: id as JobId,
+            kind,
+            arrival_us: (t * SEC as f64) as Micros,
+            input_bytes: sample_input_bytes(kind, &mut rng),
+        });
+    }
+    jobs
+}
+
+/// One bucket of the synthesized production trace (for Fig. 9a's timeline).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceBucket {
+    pub start_us: Micros,
+    pub rate_per_s: f64,
+}
+
+/// Alibaba-production-like trace: a diurnal-ish base load modulated by
+/// log-normal burst episodes, rescaled so the mean rate matches
+/// `mean_rate_per_s` (the paper rescales the real trace to its cluster
+/// capacity the same way). Returns (jobs, per-bucket rates for plotting).
+pub fn alibaba_like(
+    mean_rate_per_s: f64,
+    duration_s: f64,
+    seed: u64,
+) -> (Vec<Job>, Vec<TraceBucket>) {
+    let mut rng = Rng::new(seed);
+    let bucket_s = 5.0f64;
+    let n_buckets = (duration_s / bucket_s).ceil() as usize;
+
+    // Base: slow sinusoid (diurnal ramp compressed to the experiment span).
+    // Bursts: Poisson-arriving episodes with log-normal intensity and
+    // geometric duration — the burst structure §6.4 stresses.
+    let mut rates = vec![0.0f64; n_buckets];
+    for (i, r) in rates.iter_mut().enumerate() {
+        let phase = i as f64 / n_buckets as f64 * std::f64::consts::TAU;
+        *r = 1.0 + 0.45 * (phase - 1.0).sin();
+    }
+    let mut i = 0usize;
+    while i < n_buckets {
+        if rng.f64() < 0.12 {
+            let intensity = rng.lognormal(1.1, 0.6); // ~3x spikes
+            let len = 1 + rng.below(3) as usize;
+            for j in i..(i + len).min(n_buckets) {
+                rates[j] += intensity;
+            }
+            i += len;
+        } else {
+            i += 1;
+        }
+    }
+    // Rescale to the requested mean.
+    let cur_mean = rates.iter().sum::<f64>() / n_buckets as f64;
+    for r in rates.iter_mut() {
+        *r *= mean_rate_per_s / cur_mean;
+    }
+
+    // Draw jobs bucket by bucket (Poisson within each bucket).
+    let mut jobs = Vec::new();
+    let mut buckets = Vec::with_capacity(n_buckets);
+    let mut id: JobId = 0;
+    for (i, &rate) in rates.iter().enumerate() {
+        let start = i as f64 * bucket_s;
+        buckets.push(TraceBucket {
+            start_us: (start * SEC as f64) as Micros,
+            rate_per_s: rate,
+        });
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rate.max(1e-6));
+            if t >= bucket_s {
+                break;
+            }
+            let kind = PipelineKind::from_index(rng.below(4) as usize);
+            jobs.push(Job {
+                id,
+                kind,
+                arrival_us: ((start + t) * SEC as f64) as Micros,
+                input_bytes: sample_input_bytes(kind, &mut rng),
+            });
+            id += 1;
+        }
+    }
+    jobs.sort_by_key(|j| j.arrival_us);
+    (jobs, buckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let jobs = poisson(2.0, 4000, &[], 1);
+        let span_s = jobs.last().unwrap().arrival_us as f64 / SEC as f64;
+        let rate = jobs.len() as f64 / span_s;
+        assert!((rate - 2.0).abs() < 0.15, "rate={rate}");
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let jobs = poisson(1.0, 500, &[], 2);
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+    }
+
+    #[test]
+    fn poisson_mix_respected() {
+        // Only translation jobs when the mix is a delta.
+        let jobs = poisson(1.0, 200, &[1.0, 0.0, 0.0, 0.0], 3);
+        assert!(jobs.iter().all(|j| j.kind == PipelineKind::Translation));
+    }
+
+    #[test]
+    fn poisson_all_kinds_present_uniform() {
+        let jobs = poisson(1.0, 400, &[], 4);
+        for kind in PipelineKind::ALL {
+            assert!(jobs.iter().any(|j| j.kind == kind), "{kind:?} missing");
+        }
+    }
+
+    #[test]
+    fn input_sizes_in_domain_bands() {
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let text = sample_input_bytes(PipelineKind::Vpa, &mut rng);
+            let image = sample_input_bytes(PipelineKind::Perception, &mut rng);
+            assert!(text <= 16 * KB);
+            assert!(image >= 20 * KB);
+        }
+    }
+
+    #[test]
+    fn trace_mean_rate_rescaled() {
+        let (jobs, buckets) = alibaba_like(3.0, 400.0, 6);
+        let rate = jobs.len() as f64 / 400.0;
+        assert!((rate - 3.0).abs() < 0.4, "rate={rate}");
+        assert!(!buckets.is_empty());
+    }
+
+    #[test]
+    fn trace_is_bursty() {
+        let (_, buckets) = alibaba_like(2.0, 600.0, 7);
+        let rates: Vec<f64> = buckets.iter().map(|b| b.rate_per_s).collect();
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        assert!(max > 2.0 * mean, "no bursts: max={max} mean={mean}");
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let (a, _) = alibaba_like(2.0, 100.0, 8);
+        let (b, _) = alibaba_like(2.0, 100.0, 8);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival_us == y.arrival_us));
+    }
+}

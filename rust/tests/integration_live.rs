@@ -1,0 +1,82 @@
+//! Integration: live coordinator end-to-end, including the §5.4
+//! simulator-vs-live validation (with real PJRT execution when artifacts
+//! are present).
+
+use compass::config::{ClusterConfig, SchedulerKind};
+use compass::coordinator::{LiveCluster, LiveConfig};
+use compass::exp::validate;
+use compass::runtime::artifacts_dir;
+use compass::workload;
+use std::time::Duration;
+
+fn fast_live() -> LiveConfig {
+    LiveConfig { time_scale: 300.0, wall_timeout: Duration::from_secs(120) }
+}
+
+#[test]
+fn live_completes_mixed_workload() {
+    let jobs = workload::poisson(2.0, 25, &[], 31);
+    let rep = LiveCluster::run(ClusterConfig::default().with_seed(31), fast_live(), None, jobs)
+        .expect("live run");
+    assert_eq!(rep.metrics.jobs.len(), 25);
+    assert!(rep.metrics.mean_slowdown() >= 0.8);
+    assert!(rep.metrics.active_workers() >= 1);
+}
+
+#[test]
+fn live_compass_beats_hash_same_stream() {
+    let jobs = workload::poisson(2.5, 30, &[], 17);
+    let c = LiveCluster::run(
+        ClusterConfig::default().with_seed(17),
+        fast_live(),
+        None,
+        jobs.clone(),
+    )
+    .unwrap();
+    let h = LiveCluster::run(
+        ClusterConfig::default().with_scheduler(SchedulerKind::Hash).with_seed(17),
+        fast_live(),
+        None,
+        jobs,
+    )
+    .unwrap();
+    // Generous margin: live mode has wall-clock noise.
+    assert!(
+        c.metrics.mean_slowdown() < h.metrics.mean_slowdown() * 1.15,
+        "compass {} vs hash {}",
+        c.metrics.mean_slowdown(),
+        h.metrics.mean_slowdown()
+    );
+}
+
+#[test]
+fn validation_sim_vs_live_close() {
+    // The paper's §5.4: simulator within ~5% of the real system. We allow
+    // 25% in CI (coarse thread scheduling at 300x time compression).
+    let r = validate::run(30, 42, None).expect("validation run");
+    assert!(
+        r.within_tolerance(0.25),
+        "sim/live diverged: {}",
+        r.render()
+    );
+}
+
+#[test]
+fn live_with_pjrt_executes_real_models() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let jobs = workload::poisson(2.0, 10, &[], 5);
+    let live = LiveConfig { time_scale: 100.0, wall_timeout: Duration::from_secs(240) };
+    let rep = LiveCluster::run(ClusterConfig::default().with_seed(5), live, Some(dir), jobs)
+        .expect("live run with PJRT");
+    assert_eq!(rep.metrics.jobs.len(), 10);
+    // Every model-bearing vertex triggers one PJRT forward pass.
+    assert!(
+        rep.pjrt_executions >= 10,
+        "expected real executions, got {}",
+        rep.pjrt_executions
+    );
+}

@@ -1,0 +1,161 @@
+//! Integration: scheduler-level behaviours the paper calls out, exercised
+//! through the public API (experiment harness included).
+
+use compass::config::{ClusterConfig, SchedulerKind};
+use compass::dfg::PipelineKind;
+use compass::exp::{self, Scale};
+use compass::{workload, Simulator};
+
+fn quick() -> Scale {
+    Scale { jobs: 120, seed: 42 }
+}
+
+#[test]
+fn fig6_rate_sweep_monotone_for_everyone() {
+    // More load can't make anyone faster (statistically).
+    let r = exp::fig6::rate_sweep(quick());
+    for s in SchedulerKind::ALL {
+        let lo = r.mean(s, 0);
+        let hi = r.mean(s, r.rates.len() - 1);
+        assert!(hi > lo * 0.9, "{s:?}: hi {hi} vs lo {lo}");
+    }
+}
+
+#[test]
+fn fig6_compass_wins_high_load_boxes() {
+    let b = exp::fig6::boxes(2.0, quick(), "test");
+    let c = b.median_overall(SchedulerKind::Compass);
+    for s in [SchedulerKind::Heft, SchedulerKind::Hash] {
+        assert!(b.median_overall(s) > c, "{s:?} not worse than compass");
+    }
+}
+
+#[test]
+fn fig6_short_pipelines_suffer_most_under_bad_scheduling() {
+    // §6.2.2: the short pipelines' slowdown blows up worst for HEFT.
+    let b = exp::fig6::boxes(2.0, quick(), "test");
+    let heft_perception = b.stats(SchedulerKind::Heft, PipelineKind::Perception).median;
+    let heft_vpa = b.stats(SchedulerKind::Heft, PipelineKind::Vpa).median;
+    assert!(
+        heft_perception > heft_vpa,
+        "perception {heft_perception} !> vpa {heft_vpa}"
+    );
+}
+
+#[test]
+fn table1_shape_matches_paper() {
+    let rows = exp::table1::compute(quick());
+    let get = |s: SchedulerKind| rows.iter().find(|r| r.scheduler == s).unwrap();
+    let compass = get(SchedulerKind::Compass);
+    // Latency: compass lowest.
+    for s in [SchedulerKind::Jit, SchedulerKind::Heft, SchedulerKind::Hash] {
+        assert!(get(s).latency_s > compass.latency_s, "{s:?}");
+    }
+    // Hit rate: compass highest, high in absolute terms (>85% even at
+    // quick scale where cold-start misses weigh more; 95%+ at full scale).
+    assert!(compass.hit_rate_pct > 85.0, "{}", compass.hit_rate_pct);
+    // Resource parity: GPU utilization within a few points of each other.
+    let utils: Vec<f64> = rows.iter().map(|r| r.gpu_util_pct).collect();
+    let spread = utils.iter().cloned().fold(0.0, f64::max)
+        - utils.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread < 25.0, "GPU util spread too wide: {utils:?}");
+}
+
+#[test]
+fn fig7_every_ablation_hurts_at_high_load() {
+    let rows = exp::fig7::compute(quick());
+    let full = rows.iter().find(|r| r.variant == "compass-full").unwrap();
+    let hi = exp::fig7::RATES.len() - 1;
+    for r in &rows {
+        if r.variant == "compass-full" {
+            continue;
+        }
+        assert!(
+            r.means[hi] > full.means[hi] * 0.95,
+            "{}: {} vs full {}",
+            r.variant,
+            r.means[hi],
+            full.means[hi]
+        );
+    }
+    // Model locality is the biggest lever (paper: 8x, hit rate 99->90).
+    let noloc = rows.iter().find(|r| r.variant == "no-model-locality").unwrap();
+    assert!(noloc.means[hi] > full.means[hi] * 1.1);
+    assert!(noloc.hit_rate_pct < full.hit_rate_pct);
+}
+
+#[test]
+fn fig8_load_axis_dominates() {
+    let g = exp::fig8::compute(quick());
+    assert!(
+        g.load_axis_sensitivity() > g.cache_axis_sensitivity(),
+        "load {} !> cache {}",
+        g.load_axis_sensitivity(),
+        g.cache_axis_sensitivity()
+    );
+}
+
+#[test]
+fn fig9_compass_best_through_bursts() {
+    let r = exp::fig9::compute(quick());
+    let get = |s: SchedulerKind| r.rows.iter().find(|x| x.scheduler == s).unwrap();
+    let compass = get(SchedulerKind::Compass);
+    assert!(get(SchedulerKind::Hash).p95_s > compass.p95_s);
+    assert!(get(SchedulerKind::Heft).p95_s > compass.p95_s);
+}
+
+#[test]
+fn fig10_compass_more_resource_efficient_than_hash() {
+    let r = exp::fig10::compute(Scale { jobs: 120, seed: 42 }, true);
+    // At every cluster size, compass concentrates: active workers <= hash's.
+    for (c, h) in r.compass.iter().zip(&r.hash) {
+        assert!(
+            c.active_workers <= h.active_workers,
+            "at {} workers: compass active {} > hash active {}",
+            c.workers,
+            c.active_workers,
+            h.active_workers
+        );
+    }
+    // Hash always keeps (almost) everyone busy.
+    let last = r.hash.last().unwrap();
+    assert!(last.active_workers as f64 > 0.9 * last.workers as f64);
+}
+
+#[test]
+fn identical_streams_across_schedulers() {
+    // The comparison methodology requires every scheduler to see the exact
+    // same request stream.
+    let a = workload::poisson(2.0, 50, &[], 42);
+    let b = workload::poisson(2.0, 50, &[], 42);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.arrival_us, y.arrival_us);
+        assert_eq!(x.kind, y.kind);
+        assert_eq!(x.input_bytes, y.input_bytes);
+    }
+}
+
+#[test]
+fn seeds_change_outcomes_but_not_shape() {
+    let mut compass_wins = 0;
+    for seed in [1u64, 2, 3] {
+        let jobs = workload::poisson(2.0, 150, &[], seed);
+        let c = Simulator::simulate(
+            ClusterConfig::default().with_seed(seed),
+            jobs.clone(),
+        )
+        .metrics
+        .mean_slowdown();
+        let h = Simulator::simulate(
+            ClusterConfig::default().with_scheduler(SchedulerKind::Hash).with_seed(seed),
+            jobs,
+        )
+        .metrics
+        .mean_slowdown();
+        if c < h {
+            compass_wins += 1;
+        }
+    }
+    assert!(compass_wins >= 2, "compass won only {compass_wins}/3 seeds");
+}

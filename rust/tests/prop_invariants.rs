@@ -1,0 +1,341 @@
+//! Property-based tests on coordinator invariants: routing, batching/queue
+//! state, cache accounting, SST staleness, and whole-simulation sanity —
+//! driven by the in-tree property harness (`util::prop`, seeded + replayable).
+
+use compass::config::{ClusterConfig, CompassConfig, SchedulerKind};
+use compass::core::{Micros, GB};
+use compass::dfg::{models, pipelines, Job, PipelineKind};
+use compass::gpu::{EvictionPolicy, GpuCache};
+use compass::net::CostModel;
+use compass::sched::{self, ClusterView, Scheduler};
+use compass::sst::SstRow;
+use compass::util::prop::check;
+use compass::util::rng::Rng;
+use compass::{workload, Simulator};
+
+fn random_rows(rng: &mut Rng, n: usize) -> Vec<SstRow> {
+    (0..n)
+        .map(|_| SstRow {
+            ft_us: rng.below(20_000_000),
+            cache_bitmap: rng.next_u64() & 0xff,
+            free_cache_bytes: rng.below(16 * GB),
+            load_pushed_at: 0,
+            cache_pushed_at: 0,
+        })
+        .collect()
+}
+
+fn random_job(rng: &mut Rng) -> Job {
+    Job {
+        id: rng.next_u64() % 10_000,
+        kind: PipelineKind::from_index(rng.below(4) as usize),
+        arrival_us: rng.below(100_000_000),
+        input_bytes: 1 + rng.below(1_000_000),
+    }
+}
+
+// ---------------------------------------------------------------- routing
+
+#[test]
+fn prop_plan_routes_every_task_to_valid_worker() {
+    check("plan-valid-routing", 1, |rng| {
+        let n_workers = 1 + rng.below(16) as usize;
+        let kind = SchedulerKind::ALL[rng.below(4) as usize];
+        let cfg = ClusterConfig::default().with_scheduler(kind).with_workers(n_workers);
+        let sched = sched::build(&cfg);
+        let cost = CostModel::default();
+        let dfg = pipelines::by_kind(PipelineKind::from_index(rng.below(4) as usize), &cost);
+        let rows = random_rows(rng, n_workers);
+        let speed = vec![1.0; n_workers];
+        let job = random_job(rng);
+        let view = ClusterView {
+            now: job.arrival_us,
+            self_worker: rng.below(n_workers as u64) as usize,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+        };
+        let adfg = sched.plan(&job, &dfg, &view);
+        if adfg.assignment.len() != dfg.len() {
+            return Err("wrong ADFG length".into());
+        }
+        for (t, a) in adfg.assignment.iter().enumerate() {
+            match (kind, a) {
+                (SchedulerKind::Jit, None) => {}
+                (SchedulerKind::Jit, Some(_)) => {
+                    return Err("JIT must not pre-assign".into());
+                }
+                (_, Some(w)) if *w < n_workers => {}
+                _ => return Err(format!("task {t} badly assigned: {a:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planning_is_deterministic_given_view() {
+    check("plan-deterministic", 2, |rng| {
+        let n_workers = 1 + rng.below(8) as usize;
+        let cfg = ClusterConfig::default().with_workers(n_workers);
+        let sched = sched::build(&cfg);
+        let cost = CostModel::default();
+        let dfg = pipelines::translation(&cost);
+        let rows = random_rows(rng, n_workers);
+        let speed = vec![1.0; n_workers];
+        let job = random_job(rng);
+        let view = ClusterView {
+            now: job.arrival_us,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+        };
+        let a = sched.plan(&job, &dfg, &view);
+        let b = sched.plan(&job, &dfg, &view);
+        if a.assignment != b.assignment {
+            return Err("same view, different plans".into());
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ cache state
+
+#[test]
+fn prop_cache_accounting_never_overflows() {
+    check("cache-accounting", 3, |rng| {
+        let cap = 16 * GB;
+        let policy = if rng.f64() < 0.5 {
+            EvictionPolicy::Fifo
+        } else {
+            EvictionPolicy::QueueLookahead { window: 1 + rng.below(20) as usize }
+        };
+        let mut cache = GpuCache::new(cap, policy);
+        let mut t: Micros = 0;
+        for _ in 0..200 {
+            t += rng.below(1000);
+            let m = rng.below(8) as u8;
+            let lookahead: Vec<u8> = (0..rng.below(10)).map(|_| rng.below(8) as u8).collect();
+            if cache.contains(m) {
+                if rng.f64() < 0.3 {
+                    cache.evict(m, t);
+                }
+                continue;
+            }
+            let need = models::model_bytes(m);
+            if let Some(victims) = cache.plan_eviction(need, &lookahead) {
+                for v in victims {
+                    cache.evict(v, t);
+                }
+                cache.insert(m, t);
+            }
+            // Invariants.
+            if cache.used() > cap {
+                return Err(format!("over capacity: {}", cache.used()));
+            }
+            let sum: u64 = cache.resident().iter().map(|&x| models::model_bytes(x)).sum();
+            if sum != cache.used() {
+                return Err(format!("byte accounting drift: {} vs {}", sum, cache.used()));
+            }
+            let bm = cache.bitmap();
+            for &x in cache.resident() {
+                if bm & (1 << x) == 0 {
+                    return Err("bitmap missing resident".into());
+                }
+            }
+            if bm.count_ones() as usize != cache.resident().len() {
+                return Err("bitmap has ghost".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eviction_plan_is_sufficient_and_minimal_order() {
+    check("eviction-plan-sufficient", 4, |rng| {
+        let mut cache = GpuCache::new(16 * GB, EvictionPolicy::Fifo);
+        // Fill with random distinct models.
+        let mut ms: Vec<u8> = (0..8).collect();
+        rng.shuffle(&mut ms);
+        for &m in ms.iter().take(3) {
+            if models::model_bytes(m) <= cache.free_bytes() {
+                cache.insert(m, 0);
+            }
+        }
+        let need = 1 + rng.below(10 * GB);
+        if let Some(victims) = cache.plan_eviction(need, &[]) {
+            let freed: u64 = victims.iter().map(|&v| models::model_bytes(v)).sum();
+            if cache.free_bytes() + freed < need {
+                return Err("plan frees too little".into());
+            }
+            // All victims resident and distinct.
+            let mut seen = std::collections::HashSet::new();
+            for v in &victims {
+                if !cache.contains(*v) || !seen.insert(*v) {
+                    return Err("bad victim".into());
+                }
+            }
+        } else if need <= cache.used() + cache.free_bytes() {
+            return Err("refused although possible (nothing pinned)".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- ranking
+
+#[test]
+fn prop_ranks_strictly_decrease_along_edges() {
+    check("rank-monotone", 5, |rng| {
+        let cost = CostModel::default();
+        let dfg = pipelines::by_kind(PipelineKind::from_index(rng.below(4) as usize), &cost);
+        for t in 0..dfg.len() {
+            for &s in &dfg.succs[t] {
+                if dfg.ranks[t] <= dfg.ranks[s] {
+                    return Err(format!("rank({t}) <= rank(succ {s})"));
+                }
+            }
+        }
+        // Rank order must be a topological order.
+        let order = dfg.rank_order();
+        let pos: Vec<usize> =
+            (0..dfg.len()).map(|t| order.iter().position(|&x| x == t).unwrap()).collect();
+        for t in 0..dfg.len() {
+            for &s in &dfg.succs[t] {
+                if pos[t] >= pos[s] {
+                    return Err("rank order not topological".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- simulation
+
+#[test]
+fn prop_simulation_conserves_jobs_and_time() {
+    check("sim-conservation", 6, |rng| {
+        let n_jobs = 10 + rng.below(40) as usize;
+        let rate = 0.5 + rng.f64() * 3.0;
+        let kind = SchedulerKind::ALL[rng.below(4) as usize];
+        let n_workers = 2 + rng.below(8) as usize;
+        let seed = rng.next_u64();
+        let cfg = ClusterConfig::default()
+            .with_scheduler(kind)
+            .with_workers(n_workers)
+            .with_seed(seed);
+        let jobs = workload::poisson(rate, n_jobs, &[], seed ^ 1);
+        let arrival_max = jobs.last().unwrap().arrival_us;
+        let rep = Simulator::simulate(cfg, jobs);
+        let m = rep.metrics;
+        if m.jobs.len() != n_jobs {
+            return Err(format!("{} of {n_jobs} jobs completed", m.jobs.len()));
+        }
+        for j in &m.jobs {
+            if j.completion_us < j.arrival_us {
+                return Err("completion before arrival".into());
+            }
+            if j.slowdown() < 0.5 {
+                return Err(format!("impossible slowdown {}", j.slowdown()));
+            }
+        }
+        if m.span_us < arrival_max {
+            return Err("span ends before last arrival".into());
+        }
+        // Busy time can never exceed span per worker.
+        for w in &m.workers {
+            if w.busy_us > m.span_us {
+                return Err("worker busier than wall time".into());
+            }
+        }
+        // Hit + miss = fetch-relevant starts; fetches <= misses (each miss
+        // triggers at most one fetch) and fetches == misses here.
+        let hits: u64 = m.workers.iter().map(|w| w.hits).sum();
+        let misses: u64 = m.workers.iter().map(|w| w.misses).sum();
+        let fetches: u64 = m.workers.iter().map(|w| w.fetches).sum();
+        if fetches != misses {
+            return Err(format!("fetches {fetches} != misses {misses}"));
+        }
+        if hits + misses == 0 {
+            return Err("no model activity at all".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ablated_compass_still_correct() {
+    check("ablation-correctness", 7, |rng| {
+        let mut cfg = ClusterConfig::default().with_seed(rng.next_u64());
+        cfg.compass = CompassConfig {
+            dynamic_adjust: rng.f64() < 0.5,
+            model_locality: rng.f64() < 0.5,
+            adjust_threshold: 0.5 + rng.f64() * 4.0,
+            eviction_penalty_factor: rng.f64() * 3.0,
+        };
+        if rng.f64() < 0.5 {
+            cfg.eviction = EvictionPolicy::Fifo;
+        }
+        let jobs = workload::poisson(2.0, 30, &[], rng.next_u64());
+        let m = Simulator::simulate(cfg, jobs).metrics;
+        if m.jobs.len() != 30 {
+            return Err("ablated config lost jobs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_deterministic_across_runs() {
+    check("sim-determinism", 8, |rng| {
+        let seed = rng.next_u64();
+        let jobs = workload::poisson(1.5, 25, &[], seed);
+        let cfg = ClusterConfig::default().with_seed(seed);
+        let a = Simulator::simulate(cfg.clone(), jobs.clone());
+        let b = Simulator::simulate(cfg, jobs);
+        if a.events_processed != b.events_processed || a.sim_span_us != b.sim_span_us {
+            return Err("nondeterministic simulation".into());
+        }
+        let la: Vec<Micros> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<Micros> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        if la != lb {
+            return Err("latencies differ between identical runs".into());
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------------- sst
+
+#[test]
+fn prop_sst_reader_never_sees_unpushed_state() {
+    check("sst-staleness-bound", 9, |rng| {
+        use compass::sst::Sst;
+        let n = 2 + rng.below(10) as usize;
+        let mut sst = Sst::new(n);
+        let mut last_pushed = vec![(0u64, 0u64); n]; // (ft, time)
+        let mut t: Micros = 0;
+        for _ in 0..100 {
+            t += rng.below(50_000);
+            let w = rng.below(n as u64) as usize;
+            if rng.f64() < 0.5 {
+                let ft = t + rng.below(1_000_000);
+                sst.push_load(w, ft, t);
+                last_pushed[w] = (ft, t);
+            } else {
+                // Read: must exactly equal the last pushed value.
+                let row = sst.row(w);
+                if row.ft_us != last_pushed[w].0 || row.load_pushed_at != last_pushed[w].1 {
+                    return Err("reader observed unpushed state".into());
+                }
+                if sst.max_load_staleness(t) > t {
+                    return Err("staleness exceeds elapsed time".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
