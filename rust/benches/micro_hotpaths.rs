@@ -92,6 +92,24 @@ fn main() {
         );
     }
 
+    // --- Same workload with the event tracer on: measures observability
+    // overhead against sim_300_jobs_5_workers above (the acceptance budget
+    // is on the *disabled* path; this shows the enabled cost too).
+    {
+        let jobs = workload::poisson(2.0, 300, &[], 3);
+        let mut cfg = ClusterConfig::default();
+        cfg.trace.enabled = true;
+        let b = Bench::new("sim_300_jobs_traced")
+            .run(|| Simulator::simulate(cfg.clone(), jobs.clone()));
+        let n_events =
+            Simulator::simulate(cfg.clone(), jobs.clone()).trace.events.len();
+        println!(
+            "  -> {} trace events per run, median {:.2} ms",
+            n_events,
+            b.median_ns / 1e6
+        );
+    }
+
     // --- Scale stress: 100 workers, 40 req/s (Fig. 10 inner loop).
     {
         let jobs = workload::poisson(40.0, 1000, &[], 4);

@@ -7,6 +7,7 @@
 use crate::core::{Micros, GB, MS};
 use crate::gpu::EvictionPolicy;
 use crate::net::CostModel;
+use crate::obs::TraceConfig;
 use crate::sst::PushConfig;
 use std::path::Path;
 
@@ -102,6 +103,9 @@ pub struct ClusterConfig {
     /// Runtime multiplier for injected stragglers.
     pub straggler_factor: f64,
     pub seed: u64,
+    /// Structured event tracing (see `obs`); disabled by default so the
+    /// hot paths pay only a branch.
+    pub trace: TraceConfig,
 }
 
 impl Default for ClusterConfig {
@@ -122,6 +126,7 @@ impl Default for ClusterConfig {
             straggler_prob: 0.0,
             straggler_factor: 4.0,
             seed: 0xC0FFEE,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -194,6 +199,8 @@ impl ClusterConfig {
                 "straggler_prob" => cfg.straggler_prob = v.parse()?,
                 "straggler_factor" => cfg.straggler_factor = v.parse()?,
                 "seed" => cfg.seed = v.parse()?,
+                "trace" => cfg.trace.enabled = v.parse()?,
+                "trace_capacity" => cfg.trace.capacity = v.parse()?,
                 other => anyhow::bail!("line {}: unknown key '{other}'", lineno + 1),
             }
         }

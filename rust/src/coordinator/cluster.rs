@@ -12,9 +12,11 @@ use crate::config::ClusterConfig;
 use crate::core::{hash_pair, Micros, ModelId, TaskId, WorkerId};
 use crate::dfg::models::{model, model_bytes};
 use crate::dfg::{pipelines, Adfg, Dfg, Job};
+use crate::gpu::CacheEventKind;
 use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
+use crate::obs::{SchedPhase, Trace, TraceEvent, Tracer};
 use crate::runtime::Runtime;
-use crate::sched::{self, AssignCtx, ClusterView, Scheduler};
+use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, Scheduler};
 use crate::sim::QTask;
 use crate::sst::{Sst, SstRow};
 use crate::util::rng::Rng;
@@ -85,6 +87,10 @@ struct Shared {
     done_tx: Sender<JobRecord>,
     pjrt_execs: AtomicU64,
     pjrt_exec_ns: AtomicU64,
+    /// Shared event tracer. Lock order: this is always the *innermost*
+    /// lock — it is taken while holding `jobs` or `sst`, never the other
+    /// way around.
+    tracer: Mutex<Tracer>,
 }
 
 impl Shared {
@@ -103,6 +109,13 @@ impl Shared {
         let _ = self
             .net_tx
             .send(Parcel { to, delay: self.to_wall(delay_profiled_us), msg });
+    }
+
+    /// Record a trace event: one branch and no lock when tracing is off.
+    fn trace(&self, ev: TraceEvent) {
+        if self.cfg.trace.enabled {
+            self.tracer.lock().unwrap().record(ev);
+        }
     }
 }
 
@@ -156,6 +169,8 @@ impl WorkerNode {
         let sh = &self.shared;
         let now = sh.now();
         let rows = self.view_rows(now);
+        let mut probe =
+            if sh.cfg.trace.enabled { DecisionProbe::on() } else { DecisionProbe::off() };
         let mut jobs = sh.jobs.lock().unwrap();
         let (target, pred_outputs) = {
             let js = &jobs[job_idx];
@@ -184,8 +199,19 @@ impl WorkerNode {
                 planned: js.adfg.get(task),
                 pred_outputs: &pred_outputs,
             };
-            (sh.scheduler.assign(&ctx, &view), pred_outputs)
+            (sh.scheduler.assign_probed(&ctx, &view, &mut probe), pred_outputs)
         };
+        if probe.is_active() {
+            sh.trace(TraceEvent::Decision {
+                job: jobs[job_idx].job.id,
+                task: task as u16,
+                phase: SchedPhase::Adjust,
+                decider: self.id as u16,
+                chosen: target as u16,
+                candidates: probe.take_single(),
+                t: now,
+            });
+        }
         jobs[job_idx].adfg.set(task, target);
 
         let delta = if target == self.id { 0 } else { sh.cfg.cost.delta_net_us };
@@ -262,9 +288,10 @@ impl WorkerNode {
                 for v in victims {
                     self.gpu.evict(v, now);
                 }
-                self.gpu.record_miss();
+                self.gpu.record_miss(m, now);
                 self.queue[i].caused_fetch = true;
                 self.fetching = Some(m);
+                sh.trace(TraceEvent::FetchStart { worker: self.id as u16, model: m, t: now });
                 let td = sh.cfg.cost.td_model(model_bytes(m));
                 sh.send(self.id, td, Msg::FetchDone { model: m });
             }
@@ -293,7 +320,7 @@ impl WorkerNode {
                 let qt = self.queue.remove(i);
                 if let Some(m) = qt.model {
                     if !qt.caused_fetch {
-                        self.gpu.record_hit();
+                        self.gpu.record_hit(m, now);
                     }
                     self.gpu.pin(m);
                     // Real compute, inside the task's profiled window.
@@ -303,8 +330,18 @@ impl WorkerNode {
                 self.executed += 1;
                 let delay = qt.runtime_us;
                 let (job_idx, task) = (qt.job_idx, qt.task);
-                self.exec_end = sh.now() + delay;
+                let exec_start = sh.now();
+                self.exec_end = exec_start + delay;
                 self.running = Some(qt);
+                if sh.cfg.trace.enabled {
+                    let job = sh.jobs.lock().unwrap()[job_idx].job.id;
+                    sh.trace(TraceEvent::ExecStart {
+                        job,
+                        task: task as u16,
+                        worker: self.id as u16,
+                        t: exec_start,
+                    });
+                }
                 sh.send(self.id, delay, Msg::ExecDone { job_idx, task });
             }
         }
@@ -319,12 +356,19 @@ impl WorkerNode {
         }
         let now = sh.now();
 
-        let (exit, succs, dfg_idx) = {
+        let (exit, succs, dfg_idx, job_id) = {
             let jobs = sh.jobs.lock().unwrap();
-            let dfg_idx = jobs[job_idx].job.kind.index();
+            let js = &jobs[job_idx];
+            let dfg_idx = js.job.kind.index();
             let d = &sh.dfgs[dfg_idx];
-            (d.exit, d.succs[task].clone(), dfg_idx)
+            (d.exit, d.succs[task].clone(), dfg_idx, js.job.id)
         };
+        sh.trace(TraceEvent::ExecEnd {
+            job: job_id,
+            task: task as u16,
+            worker: self.id as u16,
+            t: now,
+        });
         {
             let mut jobs = sh.jobs.lock().unwrap();
             jobs[job_idx].output_worker[task] = Some(self.id);
@@ -333,6 +377,12 @@ impl WorkerNode {
         if task == exit {
             let jobs = sh.jobs.lock().unwrap();
             let js = &jobs[job_idx];
+            sh.trace(TraceEvent::JobComplete {
+                job: js.job.id,
+                kind: js.job.kind,
+                latency_us: now.saturating_sub(js.job.arrival_us),
+                t: now,
+            });
             let _ = sh.done_tx.send(JobRecord {
                 kind: js.job.kind,
                 arrival_us: js.job.arrival_us,
@@ -372,6 +422,26 @@ impl WorkerNode {
         let sh = self.shared.clone();
         let now = sh.now();
         let rows = self.view_rows(now);
+        let traced = sh.cfg.trace.enabled;
+        if traced {
+            let (id, kind) = {
+                let jobs = sh.jobs.lock().unwrap();
+                (jobs[job_idx].job.id, jobs[job_idx].job.kind)
+            };
+            sh.trace(TraceEvent::JobArrive { job: id, kind, t: now });
+            // Sample how stale the SST view feeding this plan was (§5.2).
+            let sst = sh.sst.lock().unwrap();
+            for w in 0..sh.cfg.n_workers {
+                let (load, cache) = sst.staleness_of(w, now);
+                sh.trace(TraceEvent::SstStaleness {
+                    worker: w as u16,
+                    load_staleness_us: load,
+                    cache_staleness_us: cache,
+                    t: now,
+                });
+            }
+        }
+        let mut probe = if traced { DecisionProbe::on() } else { DecisionProbe::off() };
         let (entry, adfg) = {
             let jobs = sh.jobs.lock().unwrap();
             let js = &jobs[job_idx];
@@ -383,8 +453,23 @@ impl WorkerNode {
                 cost: &sh.cfg.cost,
                 speed: &sh.speed,
             };
-            (dfg.entry, sh.scheduler.plan(&js.job, dfg, &view))
+            (dfg.entry, sh.scheduler.plan_probed(&js.job, dfg, &view, &mut probe))
         };
+        if probe.is_active() {
+            let job = sh.jobs.lock().unwrap()[job_idx].job.id;
+            for (task, candidates) in probe.take_records() {
+                let chosen = adfg.get(task).unwrap_or(self.id);
+                sh.trace(TraceEvent::Decision {
+                    job,
+                    task: task as u16,
+                    phase: SchedPhase::Plan,
+                    decider: self.id as u16,
+                    chosen: chosen as u16,
+                    candidates,
+                    t: now,
+                });
+            }
+        }
         sh.jobs.lock().unwrap()[job_idx].adfg = adfg;
         self.assign_and_dispatch(job_idx, entry);
     }
@@ -401,6 +486,15 @@ impl WorkerNode {
         };
         let runtime = self.rng.jitter(base, sh.cfg.runtime_jitter, 100.0) as Micros;
         self.queue.push(QTask { job_idx, task, model, runtime_us: runtime, caused_fetch: false });
+        if sh.cfg.trace.enabled {
+            let job = sh.jobs.lock().unwrap()[job_idx].job.id;
+            sh.trace(TraceEvent::TaskEnqueue {
+                job,
+                task: task as u16,
+                worker: self.id as u16,
+                t: sh.now(),
+            });
+        }
         self.try_dispatch();
     }
 
@@ -436,7 +530,13 @@ impl WorkerNode {
                 Ok(Msg::FetchDone { model }) => {
                     debug_assert_eq!(self.fetching, Some(model));
                     self.fetching = None;
-                    self.gpu.insert(model, self.shared.now());
+                    let now = self.shared.now();
+                    self.gpu.insert(model, now);
+                    self.shared.trace(TraceEvent::FetchEnd {
+                        worker: self.id as u16,
+                        model,
+                        t: now,
+                    });
                     self.try_dispatch();
                 }
                 Ok(Msg::ExecDone { job_idx, task }) => self.handle_exec_done(job_idx, task),
@@ -447,6 +547,27 @@ impl WorkerNode {
         }
         let span = self.shared.now();
         self.gpu.advance_time(span);
+        // Hand this worker's cache event log to the shared tracer.
+        if self.shared.cfg.trace.enabled {
+            let events = self.gpu.drain_log();
+            let mut tr = self.shared.tracer.lock().unwrap();
+            let worker = self.id as u16;
+            for ev in events {
+                let (model, free_bytes, t) = (ev.model, ev.free_bytes, ev.at_us);
+                tr.record(match ev.kind {
+                    CacheEventKind::Hit => TraceEvent::CacheHit { worker, model, free_bytes, t },
+                    CacheEventKind::Miss => {
+                        TraceEvent::CacheMiss { worker, model, free_bytes, t }
+                    }
+                    CacheEventKind::Insert => {
+                        TraceEvent::CacheInsert { worker, model, free_bytes, t }
+                    }
+                    CacheEventKind::Evict => {
+                        TraceEvent::CacheEvict { worker, model, free_bytes, t }
+                    }
+                });
+            }
+        }
         let s = self.gpu.stats;
         WorkerMetrics {
             busy_us: self.busy_us,
@@ -466,6 +587,8 @@ pub struct LiveReport {
     pub metrics: MetricsSink,
     pub pjrt_executions: u64,
     pub mean_pjrt_exec_us: u64,
+    /// Structured event trace; empty unless `cfg.trace.enabled`.
+    pub trace: Trace,
 }
 
 pub struct LiveCluster;
@@ -523,6 +646,7 @@ impl LiveCluster {
             done_tx,
             pjrt_execs: AtomicU64::new(0),
             pjrt_exec_ns: AtomicU64::new(0),
+            tracer: Mutex::new(Tracer::from_config(cfg.trace)),
             live,
             cfg,
         });
@@ -541,7 +665,11 @@ impl LiveCluster {
             handles.push(std::thread::spawn(move || {
                 let node = WorkerNode {
                     id,
-                    gpu: crate::gpu::GpuCache::new(sh.cfg.gpu_capacity, sh.cfg.eviction),
+                    gpu: {
+                        let mut g = crate::gpu::GpuCache::new(sh.cfg.gpu_capacity, sh.cfg.eviction);
+                        g.set_logging(sh.cfg.trace.enabled);
+                        g
+                    },
                     shared: sh,
                     runtime: None,
                     queue: Vec::new(),
@@ -616,6 +744,9 @@ impl LiveCluster {
             handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
         let pjrt_executions = shared.pjrt_execs.load(Ordering::Relaxed);
         let pjrt_ns = shared.pjrt_exec_ns.load(Ordering::Relaxed);
+        // All workers have joined (and drained their cache logs): the trace
+        // is complete.
+        let trace = shared.tracer.lock().unwrap().take();
         drop(net_tx);
         drop(shared);
         let _ = fabric.join();
@@ -631,6 +762,7 @@ impl LiveCluster {
             metrics,
             pjrt_executions,
             mean_pjrt_exec_us: pjrt_ns / 1000 / pjrt_executions.max(1),
+            trace,
         })
     }
 }
@@ -649,6 +781,20 @@ mod tests {
         assert_eq!(rep.metrics.jobs.len(), 12);
         assert!(rep.metrics.mean_slowdown() >= 0.8);
         assert!(rep.metrics.cache_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn live_cluster_produces_trace_when_enabled() {
+        let mut cfg = ClusterConfig::default().with_seed(5);
+        cfg.trace.enabled = true;
+        let live = LiveConfig { time_scale: 400.0, wall_timeout: Duration::from_secs(60) };
+        let jobs = workload::poisson(2.0, 8, &[], 21);
+        let rep = LiveCluster::run(cfg, live, None, jobs).unwrap();
+        assert_eq!(rep.metrics.jobs.len(), 8);
+        assert_eq!(rep.trace.count(|e| matches!(e, TraceEvent::JobComplete { .. })), 8);
+        assert!(rep.trace.count(|e| matches!(e, TraceEvent::Decision { .. })) > 0);
+        assert!(!rep.trace.task_spans().is_empty());
+        assert!(rep.trace.count(|e| matches!(e, TraceEvent::SstStaleness { .. })) > 0);
     }
 
     #[test]

@@ -29,10 +29,14 @@ pub fn cli_serve(args: &Args) -> anyhow::Result<()> {
     use crate::config::{ClusterConfig, SchedulerKind};
     let scheduler = SchedulerKind::parse(args.get_or("scheduler", "compass"))
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler"))?;
-    let cfg = ClusterConfig::default()
+    let trace_out = args.get_path("trace-out");
+    let metrics_out = args.get_path("metrics-out");
+    let mut cfg = ClusterConfig::default()
         .with_scheduler(scheduler)
         .with_workers(args.get_usize("workers", 5))
         .with_seed(args.get_u64("seed", 42));
+    // Either output needs the tracer running.
+    cfg.trace.enabled |= trace_out.is_some() || metrics_out.is_some();
     let rate = args.get_f64("rate", 2.0);
     let n_jobs = args.get_usize("jobs", 40);
     let seed = cfg.seed ^ 0x9e37;
@@ -62,5 +66,21 @@ pub fn cli_serve(args: &Args) -> anyhow::Result<()> {
         report.pjrt_executions,
         report.mean_pjrt_exec_us,
     );
+    crate::obs::write_outputs(
+        &report.trace,
+        &report.metrics,
+        trace_out.as_deref(),
+        metrics_out.as_deref(),
+    )?;
+    if let Some(p) = &trace_out {
+        println!(
+            "chrome trace ({} events) written to {}",
+            report.trace.events.len(),
+            p.display()
+        );
+    }
+    if let Some(p) = &metrics_out {
+        println!("metrics snapshot written to {}", p.display());
+    }
     Ok(())
 }

@@ -49,18 +49,30 @@ impl Scale {
 }
 
 /// Run one simulator scenario: `scheduler` at `rate` req/s over the
-/// standard 4-pipeline mix.
+/// standard 4-pipeline mix. Returns the full report (incl. the trace when
+/// the mutator enabled it).
+pub fn run_scenario_report(
+    scheduler: SchedulerKind,
+    rate: f64,
+    scale: Scale,
+    mutate: impl FnOnce(&mut ClusterConfig),
+) -> crate::sim::SimReport {
+    let mut cfg = ClusterConfig::default().with_scheduler(scheduler).with_seed(scale.seed);
+    mutate(&mut cfg);
+    // Workload seed is shared across schedulers: identical request streams.
+    let jobs = workload::poisson(rate, scale.jobs, &[], scale.seed ^ 0x9e37_79b9);
+    Simulator::simulate(cfg, jobs)
+}
+
+/// Metrics-only variant of [`run_scenario_report`] — what most experiment
+/// modules consume.
 pub fn run_scenario(
     scheduler: SchedulerKind,
     rate: f64,
     scale: Scale,
     mutate: impl FnOnce(&mut ClusterConfig),
 ) -> MetricsSink {
-    let mut cfg = ClusterConfig::default().with_scheduler(scheduler).with_seed(scale.seed);
-    mutate(&mut cfg);
-    // Workload seed is shared across schedulers: identical request streams.
-    let jobs = workload::poisson(rate, scale.jobs, &[], scale.seed ^ 0x9e37_79b9);
-    Simulator::simulate(cfg, jobs).metrics
+    run_scenario_report(scheduler, rate, scale, mutate).metrics
 }
 
 /// CLI dispatch for `compass experiment <which>`.
@@ -102,6 +114,34 @@ pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
             fig10::run(scale, args.flag("quick"));
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+
+    // Observability side-channel: with `--trace-out` / `--metrics-out`,
+    // re-run the canonical Compass scenario (2 req/s, the Fig. 6b operating
+    // point) with tracing on and export it. Experiments themselves stay
+    // untraced so their numbers match the paper runs exactly.
+    let trace_out = args.get_path("trace-out");
+    let metrics_out = args.get_path("metrics-out");
+    if trace_out.is_some() || metrics_out.is_some() {
+        let rep = run_scenario_report(SchedulerKind::Compass, 2.0, scale, |cfg| {
+            cfg.trace.enabled = true;
+        });
+        crate::obs::write_outputs(
+            &rep.trace,
+            &rep.metrics,
+            trace_out.as_deref(),
+            metrics_out.as_deref(),
+        )?;
+        if let Some(p) = &trace_out {
+            println!(
+                "chrome trace ({} events) written to {}",
+                rep.trace.events.len(),
+                p.display()
+            );
+        }
+        if let Some(p) = &metrics_out {
+            println!("metrics snapshot written to {}", p.display());
+        }
     }
     Ok(())
 }

@@ -45,6 +45,25 @@ impl CacheStats {
     }
 }
 
+/// What happened to the cache (for the `obs` event log).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheEventKind {
+    Hit,
+    Miss,
+    Insert,
+    Evict,
+}
+
+/// One logged cache state change. `free_bytes` is the free space *after*
+/// the change took effect.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheEvent {
+    pub kind: CacheEventKind,
+    pub model: ModelId,
+    pub at_us: Micros,
+    pub free_bytes: u64,
+}
+
 /// One worker's Navigator cache.
 #[derive(Debug, Clone)]
 pub struct GpuCache {
@@ -56,6 +75,9 @@ pub struct GpuCache {
     pins: [u16; 64],
     policy: EvictionPolicy,
     pub stats: CacheStats,
+    /// Structured event log (only filled when `logging` is on).
+    log: Vec<CacheEvent>,
+    logging: bool,
 }
 
 impl GpuCache {
@@ -67,6 +89,27 @@ impl GpuCache {
             pins: [0; 64],
             policy,
             stats: CacheStats::default(),
+            log: Vec::new(),
+            logging: false,
+        }
+    }
+
+    /// Enable structured event logging (see [`CacheEvent`]); off by default
+    /// so untraced runs pay nothing.
+    pub fn set_logging(&mut self, on: bool) {
+        self.logging = on;
+    }
+
+    /// Drain the accumulated event log.
+    pub fn drain_log(&mut self) -> Vec<CacheEvent> {
+        std::mem::take(&mut self.log)
+    }
+
+    #[inline]
+    fn log_event(&mut self, kind: CacheEventKind, m: ModelId, now: Micros) {
+        if self.logging {
+            let free_bytes = self.free_bytes();
+            self.log.push(CacheEvent { kind, model: m, at_us: now, free_bytes });
         }
     }
 
@@ -172,6 +215,7 @@ impl GpuCache {
         self.resident.remove(pos);
         self.used -= model_bytes(m);
         self.stats.evictions += 1;
+        self.log_event(CacheEventKind::Evict, m, now);
     }
 
     /// Insert a fetched model (space must already be available).
@@ -183,14 +227,17 @@ impl GpuCache {
         self.resident.push(m);
         self.used += sz;
         self.stats.fetches += 1;
+        self.log_event(CacheEventKind::Insert, m, now);
     }
 
-    pub fn record_hit(&mut self) {
+    pub fn record_hit(&mut self, m: ModelId, now: Micros) {
         self.stats.hits += 1;
+        self.log_event(CacheEventKind::Hit, m, now);
     }
 
-    pub fn record_miss(&mut self) {
+    pub fn record_miss(&mut self, m: ModelId, now: Micros) {
         self.stats.misses += 1;
+        self.log_event(CacheEventKind::Miss, m, now);
     }
 }
 
@@ -290,5 +337,37 @@ mod tests {
         c.insert(OPT, 0);
         c.advance_time(1_000_000);
         assert_eq!(c.stats.byte_time_integral, 6 * GB as u128 * 1_000_000);
+    }
+
+    #[test]
+    fn event_log_records_lifecycle_when_enabled() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.set_logging(true);
+        c.record_miss(OPT, 5);
+        c.insert(OPT, 10);
+        c.record_hit(OPT, 20);
+        c.evict(OPT, 30);
+        let log = c.drain_log();
+        let kinds: Vec<CacheEventKind> = log.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                CacheEventKind::Miss,
+                CacheEventKind::Insert,
+                CacheEventKind::Hit,
+                CacheEventKind::Evict
+            ]
+        );
+        assert_eq!(log[1].free_bytes, 10 * GB);
+        assert!(c.drain_log().is_empty(), "drain empties the log");
+    }
+
+    #[test]
+    fn event_log_empty_when_disabled() {
+        let mut c = cache(EvictionPolicy::Fifo);
+        c.record_miss(OPT, 0);
+        c.insert(OPT, 0);
+        assert!(c.drain_log().is_empty());
+        assert_eq!(c.stats.misses, 1, "counters still accumulate");
     }
 }

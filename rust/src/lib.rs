@@ -20,6 +20,7 @@ pub mod exp;
 pub mod gpu;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod profiles;
 pub mod runtime;
 pub mod sched;

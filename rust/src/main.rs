@@ -16,9 +16,12 @@ fn usage() -> ! {
          commands:\n\
          \x20 simulate    --scheduler compass|jit|heft|hash --rate R --jobs N\n\
          \x20             --workers W --seed S\n\
+         \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|all>\n\
          \x20             [--quick] [--seed S]\n\
+         \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 serve       --rate R --jobs N [--workers W] [--artifacts DIR]\n\
+         \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 validate    [--jobs N] [--artifacts DIR]\n\
          \x20 models      [--artifacts DIR]"
     );
@@ -42,10 +45,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     use compass::{ClusterConfig, SchedulerKind, Simulator};
     let kind = SchedulerKind::parse(args.get_or("scheduler", "compass"))
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler"))?;
-    let cfg = ClusterConfig::default()
+    let trace_out = args.get_path("trace-out");
+    let metrics_out = args.get_path("metrics-out");
+    let mut cfg = ClusterConfig::default()
         .with_scheduler(kind)
         .with_workers(args.get_usize("workers", 5))
         .with_seed(args.get_u64("seed", 42));
+    // Either output needs the tracer running.
+    cfg.trace.enabled |= trace_out.is_some() || metrics_out.is_some();
     let seed = cfg.seed ^ 0x9e37;
     let jobs = compass::workload::poisson(
         args.get_f64("rate", 2.0),
@@ -70,6 +77,18 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         m.cache_hit_rate(),
         m.active_workers()
     );
+    compass::obs::write_outputs(
+        &rep.trace,
+        &rep.metrics,
+        trace_out.as_deref(),
+        metrics_out.as_deref(),
+    )?;
+    if let Some(p) = &trace_out {
+        println!("chrome trace ({} events) written to {}", rep.trace.events.len(), p.display());
+    }
+    if let Some(p) = &metrics_out {
+        println!("metrics snapshot written to {}", p.display());
+    }
     Ok(())
 }
 

@@ -103,17 +103,21 @@ impl MetricsSink {
     }
 
     /// Table 1 "GPU memory utilization (%)": time-averaged resident bytes
-    /// over capacity.
+    /// over capacity. Workers with no GPU memory (capacity 0 — e.g. a
+    /// CPU-only ingress node) have no meaningful ratio and are excluded
+    /// rather than poisoning the average with inf/NaN.
     pub fn gpu_memory_utilization(&self) -> f64 {
-        if self.span_us == 0 || self.workers.is_empty() {
+        if self.span_us == 0 {
             return 0.0;
         }
-        let num: f64 = self
-            .workers
-            .iter()
-            .map(|w| w.cache_byte_time as f64 / (self.span_us as f64 * w.gpu_capacity as f64))
-            .sum();
-        100.0 * num / self.workers.len() as f64
+        let with_gpu = self.workers.iter().filter(|w| w.gpu_capacity > 0);
+        let (num, n) = with_gpu.fold((0.0f64, 0usize), |(num, n), w| {
+            (num + w.cache_byte_time as f64 / (self.span_us as f64 * w.gpu_capacity as f64), n + 1)
+        });
+        if n == 0 {
+            return 0.0;
+        }
+        100.0 * num / n as f64
     }
 
     /// Table 1 "GPU energy use (J)" under the linear power model.
@@ -212,6 +216,34 @@ mod tests {
         // Energy: 2 workers idle 10 s = 200 J, plus 60 W × 5 s active = 300 J.
         assert!((sink.gpu_energy_joules() - 500.0).abs() < 1e-9);
         assert_eq!(sink.active_workers(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_worker_does_not_poison_memory_utilization() {
+        // One real GPU at 50% memory utilization plus one capacity-0 worker
+        // (previously a division by zero → inf/NaN for the whole average).
+        let sink = MetricsSink {
+            workers: vec![
+                WorkerMetrics {
+                    gpu_capacity: 16 * GB,
+                    cache_byte_time: 8 * GB as u128 * (10 * SEC) as u128,
+                    ..Default::default()
+                },
+                WorkerMetrics { gpu_capacity: 0, ..Default::default() },
+            ],
+            span_us: 10 * SEC,
+            ..Default::default()
+        };
+        let util = sink.gpu_memory_utilization();
+        assert!(util.is_finite(), "must not be inf/NaN, got {util}");
+        assert!((util - 50.0).abs() < 1e-9, "zero-capacity worker excluded, got {util}");
+        // All workers capacity-0 ⇒ defined as 0, not NaN.
+        let none = MetricsSink {
+            workers: vec![WorkerMetrics::default()],
+            span_us: 10 * SEC,
+            ..Default::default()
+        };
+        assert_eq!(none.gpu_memory_utilization(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Chrome `trace_event` JSON exporter.
+//!
+//! Emits the JSON-object flavor of the trace-event format: a `traceEvents`
+//! array plus `displayTimeUnit`. Loadable in Perfetto (ui.perfetto.dev) or
+//! `chrome://tracing`. Layout: pid 0 is the cluster; each worker is one
+//! thread (tid = worker id) carrying its queue/fetch/exec spans as complete
+//! (`ph:"X"`) duration events; tid [`JOBS_TID`] is a synthetic "jobs" track
+//! with job arrive/complete instants; scheduler decisions are instant events
+//! on the deciding worker's track with candidate scores in `args`.
+
+use super::{Trace, TraceEvent};
+use crate::util::json::escape;
+use std::collections::BTreeSet;
+use std::fmt::Write;
+
+/// Synthetic tid for the job-lifecycle track (above any real worker id).
+pub const JOBS_TID: u32 = 65_535;
+
+fn instant(out: &mut String, name: &str, cat: &str, tid: u32, t: u64, args: &str) {
+    let _ = writeln!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\"ts\":{},\"args\":{{{}}}}},",
+        escape(name),
+        cat,
+        tid,
+        t,
+        args
+    );
+}
+
+fn span(out: &mut String, name: &str, cat: &str, tid: u32, ts: u64, dur: u64, args: &str) {
+    let _ = writeln!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{{}}}}},",
+        escape(name),
+        cat,
+        tid,
+        ts,
+        dur,
+        args
+    );
+}
+
+/// Render `trace` as a Chrome trace_event JSON document.
+pub fn chrome_trace(trace: &Trace) -> String {
+    let mut out = String::with_capacity(256 + trace.events.len() * 160);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+
+    // Thread-name metadata: one track per worker seen anywhere in the trace,
+    // plus the synthetic jobs track.
+    let mut workers: BTreeSet<u16> = BTreeSet::new();
+    for ev in &trace.events {
+        match *ev {
+            TraceEvent::TaskEnqueue { worker, .. }
+            | TraceEvent::ExecStart { worker, .. }
+            | TraceEvent::ExecEnd { worker, .. }
+            | TraceEvent::FetchStart { worker, .. }
+            | TraceEvent::FetchEnd { worker, .. }
+            | TraceEvent::CacheHit { worker, .. }
+            | TraceEvent::CacheMiss { worker, .. }
+            | TraceEvent::CacheInsert { worker, .. }
+            | TraceEvent::CacheEvict { worker, .. }
+            | TraceEvent::SstStaleness { worker, .. } => {
+                workers.insert(worker);
+            }
+            TraceEvent::Decision { decider, chosen, .. } => {
+                workers.insert(decider);
+                workers.insert(chosen);
+            }
+            _ => {}
+        }
+    }
+    let _ = writeln!(
+        out,
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"args\":{{\"name\":\"compass cluster\"}}}},"
+    );
+    for &w in &workers {
+        let _ = writeln!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{w},\"args\":{{\"name\":\"worker {w}\"}}}},"
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{JOBS_TID},\"args\":{{\"name\":\"jobs\"}}}},"
+    );
+
+    // Per-task spans: queue-wait then execute, on the executing worker's
+    // track; model fetches as their own spans.
+    for s in trace.task_spans() {
+        let args = format!("\"job\":{},\"task\":{}", s.job, s.task);
+        let qname = format!("queue j{}:t{}", s.job, s.task);
+        span(&mut out, &qname, "queue", s.worker as u32, s.enqueue_us, s.queue_wait_us(), &args);
+        let xname = format!("exec j{}:t{}", s.job, s.task);
+        span(&mut out, &xname, "exec", s.worker as u32, s.start_us, s.exec_us(), &args);
+    }
+    for f in trace.fetch_spans() {
+        let args = format!("\"model\":{}", f.model);
+        let name = format!("fetch m{}", f.model);
+        span(
+            &mut out,
+            &name,
+            "fetch",
+            f.worker as u32,
+            f.start_us,
+            f.end_us.saturating_sub(f.start_us),
+            &args,
+        );
+    }
+
+    for ev in &trace.events {
+        match *ev {
+            TraceEvent::JobArrive { job, kind, t } => {
+                let args = format!("\"job\":{},\"kind\":\"{}\"", job, kind.name());
+                instant(&mut out, "job arrive", "job", JOBS_TID, t, &args);
+            }
+            TraceEvent::JobComplete { job, kind, latency_us, t } => {
+                let args = format!(
+                    "\"job\":{},\"kind\":\"{}\",\"latency_us\":{}",
+                    job,
+                    kind.name(),
+                    latency_us
+                );
+                instant(&mut out, "job complete", "job", JOBS_TID, t, &args);
+            }
+            TraceEvent::Decision { job, task, phase, decider, chosen, candidates, t } => {
+                let mut cands = String::new();
+                for (i, (w, score)) in candidates.iter().enumerate() {
+                    if i > 0 {
+                        cands.push(',');
+                    }
+                    let _ = write!(cands, "{{\"w\":{w},\"score_us\":{score}}}");
+                }
+                let args = format!(
+                    "\"job\":{job},\"task\":{task},\"phase\":\"{}\",\"chosen\":{chosen},\"scored\":{},\"candidates\":[{cands}]",
+                    phase.name(),
+                    candidates.total
+                );
+                let name = format!("decision {} j{}:t{}", phase.name(), job, task);
+                instant(&mut out, &name, "sched", decider as u32, t, &args);
+            }
+            TraceEvent::CacheHit { worker, model, free_bytes, t } => {
+                let args = format!("\"model\":{model},\"free_bytes\":{free_bytes}");
+                instant(&mut out, "cache hit", "cache", worker as u32, t, &args);
+            }
+            TraceEvent::CacheMiss { worker, model, free_bytes, t } => {
+                let args = format!("\"model\":{model},\"free_bytes\":{free_bytes}");
+                instant(&mut out, "cache miss", "cache", worker as u32, t, &args);
+            }
+            TraceEvent::CacheInsert { worker, model, free_bytes, t } => {
+                let args = format!("\"model\":{model},\"free_bytes\":{free_bytes}");
+                instant(&mut out, "cache insert", "cache", worker as u32, t, &args);
+            }
+            TraceEvent::CacheEvict { worker, model, free_bytes, t } => {
+                let args = format!("\"model\":{model},\"free_bytes\":{free_bytes}");
+                instant(&mut out, "cache evict", "cache", worker as u32, t, &args);
+            }
+            TraceEvent::SstStaleness { worker, load_staleness_us, cache_staleness_us, t } => {
+                let args = format!(
+                    "\"load_staleness_us\":{load_staleness_us},\"cache_staleness_us\":{cache_staleness_us}"
+                );
+                instant(&mut out, "sst staleness", "sst", worker as u32, t, &args);
+            }
+            _ => {}
+        }
+    }
+
+    // Trailer metadata doubles as the "no trailing comma" terminator.
+    let _ = writeln!(
+        out,
+        "{{\"name\":\"trace_dropped_events\",\"ph\":\"M\",\"pid\":0,\"args\":{{\"dropped\":{}}}}}",
+        trace.dropped
+    );
+    out.push_str("]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{CandidateSet, SchedPhase};
+    use crate::util::json::Json;
+
+    fn sample_trace() -> Trace {
+        let mut cands = CandidateSet::default();
+        cands.push(0, 500);
+        cands.push(1, 300);
+        Trace {
+            events: vec![
+                TraceEvent::JobArrive { job: 7, kind: crate::dfg::PipelineKind::Vpa, t: 0 },
+                TraceEvent::Decision {
+                    job: 7,
+                    task: 1,
+                    phase: SchedPhase::Plan,
+                    decider: 0,
+                    chosen: 1,
+                    candidates: cands,
+                    t: 1,
+                },
+                TraceEvent::TaskEnqueue { job: 7, task: 1, worker: 1, t: 2 },
+                TraceEvent::FetchStart { worker: 1, model: 4, t: 2 },
+                TraceEvent::FetchEnd { worker: 1, model: 4, t: 40 },
+                TraceEvent::ExecStart { job: 7, task: 1, worker: 1, t: 40 },
+                TraceEvent::ExecEnd { job: 7, task: 1, worker: 1, t: 90 },
+                TraceEvent::JobComplete {
+                    job: 7,
+                    kind: crate::dfg::PipelineKind::Vpa,
+                    latency_us: 90,
+                    t: 90,
+                },
+            ],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn output_is_valid_json_with_expected_shape() {
+        let text = chrome_trace(&sample_trace());
+        let json = Json::parse(&text).expect("chrome trace must parse");
+        let events = json.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+        // Phase spans: queue + exec + fetch all present as ph:"X".
+        let cats: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .filter_map(|e| e.get("cat").and_then(|c| c.as_str()))
+            .collect();
+        assert!(cats.contains(&"queue"));
+        assert!(cats.contains(&"exec"));
+        assert!(cats.contains(&"fetch"));
+        // The decision instant carries candidate scores.
+        let decision = events
+            .iter()
+            .find(|e| e.get("cat").and_then(|c| c.as_str()) == Some("sched"))
+            .expect("decision event");
+        let cands = decision
+            .get("args")
+            .and_then(|a| a.get("candidates"))
+            .and_then(|c| c.as_arr())
+            .expect("candidates array");
+        assert_eq!(cands.len(), 2);
+        assert_eq!(cands[1].get("score_us").and_then(|s| s.as_u64()), Some(300));
+        assert_eq!(decision.get("args").and_then(|a| a.get("chosen")).and_then(|c| c.as_u64()), Some(1));
+        // Worker track metadata exists.
+        assert!(events.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("M")
+                && e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+                    == Some("worker 1")
+        }));
+    }
+
+    #[test]
+    fn span_durations_match_phases() {
+        let text = chrome_trace(&sample_trace());
+        let json = Json::parse(&text).unwrap();
+        let events = json.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        let dur_of = |cat: &str| {
+            events
+                .iter()
+                .find(|e| e.get("cat").and_then(|c| c.as_str()) == Some(cat))
+                .and_then(|e| e.get("dur"))
+                .and_then(|d| d.as_u64())
+                .unwrap()
+        };
+        assert_eq!(dur_of("queue"), 38);
+        assert_eq!(dur_of("exec"), 50);
+        assert_eq!(dur_of("fetch"), 38);
+    }
+}

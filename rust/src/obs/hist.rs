@@ -1,0 +1,208 @@
+//! Log-bucketed latency histogram: fixed footprint, O(1) record, and
+//! p50/p90/p99 accessors good to a factor of 2 (bucket i holds values whose
+//! bit-length is i, i.e. [2^(i-1), 2^i - 1] µs). Percentiles are bucket
+//! midpoints clamped to the observed [min, max], so constant-valued streams
+//! report the exact value.
+
+/// Number of power-of-two buckets. Bucket 0 holds the value 0; buckets
+/// 1..N-1 hold values of that bit-length; the last bucket absorbs everything
+/// ≥ 2^(N-2) (~9.1 minutes in µs — far beyond any job latency here).
+pub const N_BUCKETS: usize = 41;
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: [0; N_BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let bits = 64 - v.leading_zeros() as usize;
+        bits.min(N_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (the last bucket is unbounded).
+    pub fn bucket_upper(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            _ if i >= N_BUCKETS - 1 => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Raw per-bucket counts (for exporters).
+    pub fn bucket_counts(&self) -> &[u64; N_BUCKETS] {
+        &self.counts
+    }
+
+    /// Value at quantile `p` in [0, 1]: midpoint of the bucket containing
+    /// the p-th ranked sample, clamped to the observed range.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let lo = if i == 0 { 0 } else { 1u64 << (i - 1) };
+                let hi = Self::bucket_upper(i);
+                let mid = lo + (hi - lo) / 2;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(1023), 10);
+        assert_eq!(Histogram::bucket_of(1024), 11);
+        assert_eq!(Histogram::bucket_of(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_upper(0), 0);
+        assert_eq!(Histogram::bucket_upper(10), 1023);
+        assert_eq!(Histogram::bucket_upper(N_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn constant_stream_is_exact() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(777);
+        }
+        assert_eq!(h.p50(), 777);
+        assert_eq!(h.p99(), 777);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.mean(), 777.0);
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_bounded() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let (p50, p90, p99) = (h.p50(), h.p90(), h.p99());
+        assert!(p50 <= p90 && p90 <= p99);
+        assert!(p99 <= h.max());
+        assert!(p50 >= h.min());
+        // p50 of 1..=1000 is 500; log-bucket resolution is a factor of 2.
+        assert!((250..=1000).contains(&p50), "p50 = {p50}");
+    }
+
+    #[test]
+    fn zero_values_and_empty() {
+        let empty = Histogram::new();
+        assert_eq!(empty.p50(), 0);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.min(), 0);
+        let mut h = Histogram::new();
+        h.record(0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1000);
+        assert_eq!(a.sum(), 1010);
+    }
+}

@@ -1,0 +1,241 @@
+//! Prometheus text-exposition exporter: a one-shot snapshot of the
+//! end-of-run metrics (and, when a trace is available, phase-latency
+//! histograms reconstructed from it) in the format `promtool` and the
+//! Prometheus scraper accept. Histograms use the standard cumulative
+//! `_bucket{le=...}` / `_sum` / `_count` triple with `le` in seconds.
+
+use super::{Histogram, Trace};
+use crate::metrics::MetricsSink;
+use std::fmt::Write;
+
+const US_PER_SEC: f64 = 1_000_000.0;
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Emit a histogram of microsecond samples as a seconds-based Prometheus
+/// histogram. Empty buckets are elided (cumulative counts stay correct);
+/// the `+Inf` bucket always closes the series.
+fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in h.bucket_counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        if i + 1 < super::hist::N_BUCKETS {
+            let le = Histogram::bucket_upper(i) as f64 / US_PER_SEC;
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", h.sum() as f64 / US_PER_SEC);
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Render an end-of-run metrics snapshot, optionally enriched with
+/// phase-latency histograms from `trace`.
+pub fn prometheus_snapshot(m: &MetricsSink, trace: Option<&Trace>) -> String {
+    let mut out = String::with_capacity(4096);
+
+    counter(
+        &mut out,
+        "compass_jobs_completed_total",
+        "Jobs completed during the run.",
+        m.jobs.len() as u64,
+    );
+    counter(
+        &mut out,
+        "compass_jobs_incomplete_total",
+        "Jobs generated but not completed when the run ended.",
+        m.incomplete as u64,
+    );
+    gauge(&mut out, "compass_span_seconds", "Observed run span.", m.span_us as f64 / US_PER_SEC);
+    gauge(
+        &mut out,
+        "compass_gpu_utilization_percent",
+        "Fraction of wall time GPUs were executing (Table 1).",
+        m.gpu_utilization(),
+    );
+    gauge(
+        &mut out,
+        "compass_gpu_memory_utilization_percent",
+        "Time-averaged resident model bytes over capacity (Table 1).",
+        m.gpu_memory_utilization(),
+    );
+    gauge(
+        &mut out,
+        "compass_gpu_energy_joules",
+        "Integrated energy under the linear T4 power model (Table 1).",
+        m.gpu_energy_joules(),
+    );
+    gauge(
+        &mut out,
+        "compass_cache_hit_rate_percent",
+        "GPU model-cache hit rate (Table 1).",
+        m.cache_hit_rate(),
+    );
+    gauge(
+        &mut out,
+        "compass_active_workers",
+        "Workers doing non-negligible work (Fig. 10).",
+        m.active_workers() as f64,
+    );
+
+    // Per-worker counters, labeled by worker id.
+    let per_worker: [(&str, &str, fn(&crate::metrics::WorkerMetrics) -> u64); 4] = [
+        ("compass_worker_cache_hits_total", "Model-cache hits.", |w| w.hits),
+        ("compass_worker_cache_misses_total", "Model-cache misses.", |w| w.misses),
+        ("compass_worker_model_fetches_total", "Model fetches started.", |w| w.fetches),
+        ("compass_worker_cache_evictions_total", "Models evicted.", |w| w.evictions),
+    ];
+    for (name, help, get) in per_worker {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (i, w) in m.workers.iter().enumerate() {
+            let _ = writeln!(out, "{name}{{worker=\"{i}\"}} {}", get(w));
+        }
+    }
+    let _ = writeln!(out, "# HELP compass_worker_busy_seconds Time spent executing tasks.");
+    let _ = writeln!(out, "# TYPE compass_worker_busy_seconds gauge");
+    for (i, w) in m.workers.iter().enumerate() {
+        let _ =
+            writeln!(out, "compass_worker_busy_seconds{{worker=\"{i}\"}} {}", w.busy_us as f64 / US_PER_SEC);
+    }
+
+    // Job end-to-end latency histogram from the sink (always available).
+    let mut job_lat = Histogram::new();
+    for j in &m.jobs {
+        job_lat.record(j.latency_us());
+    }
+    histogram(
+        &mut out,
+        "compass_job_latency_seconds",
+        "End-to-end job latency.",
+        &job_lat,
+    );
+
+    // Phase histograms need per-event data: only present with a trace.
+    if let Some(tr) = trace {
+        histogram(
+            &mut out,
+            "compass_task_queue_wait_seconds",
+            "Per-task queue-wait phase (enqueue to exec start).",
+            &tr.queue_wait_hist(),
+        );
+        histogram(
+            &mut out,
+            "compass_task_exec_seconds",
+            "Per-task execute phase.",
+            &tr.exec_hist(),
+        );
+        histogram(
+            &mut out,
+            "compass_model_fetch_seconds",
+            "Model fetch (cold load) duration.",
+            &tr.fetch_hist(),
+        );
+        histogram(
+            &mut out,
+            "compass_sst_staleness_seconds",
+            "SST load-row staleness at decision time.",
+            &tr.sst_staleness_hist(),
+        );
+        counter(
+            &mut out,
+            "compass_trace_events_total",
+            "Trace events retained in the ring buffer.",
+            tr.events.len() as u64,
+        );
+        counter(
+            &mut out,
+            "compass_trace_dropped_total",
+            "Oldest trace events overwritten by ring wraparound.",
+            tr.dropped,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::PipelineKind;
+    use crate::metrics::{JobRecord, WorkerMetrics};
+    use crate::obs::TraceEvent;
+
+    fn sink() -> MetricsSink {
+        MetricsSink {
+            jobs: vec![JobRecord {
+                kind: PipelineKind::Vpa,
+                arrival_us: 0,
+                completion_us: 2_000_000,
+                lower_bound_us: 1_000_000,
+            }],
+            workers: vec![WorkerMetrics {
+                busy_us: 500_000,
+                hits: 3,
+                misses: 1,
+                gpu_capacity: 16_000_000_000,
+                active: true,
+                ..Default::default()
+            }],
+            span_us: 10_000_000,
+            incomplete: 2,
+        }
+    }
+
+    #[test]
+    fn snapshot_contains_core_series() {
+        let text = prometheus_snapshot(&sink(), None);
+        assert!(text.contains("compass_jobs_completed_total 1"));
+        assert!(text.contains("compass_jobs_incomplete_total 2"));
+        assert!(text.contains("compass_worker_cache_hits_total{worker=\"0\"} 3"));
+        assert!(text.contains("compass_job_latency_seconds_count 1"));
+        assert!(text.contains("le=\"+Inf\"} 1"));
+        // Every HELP has a TYPE.
+        let helps = text.matches("# HELP").count();
+        let types = text.matches("# TYPE").count();
+        assert_eq!(helps, types);
+    }
+
+    #[test]
+    fn trace_adds_phase_histograms() {
+        let trace = Trace {
+            events: vec![
+                TraceEvent::TaskEnqueue { job: 1, task: 0, worker: 0, t: 0 },
+                TraceEvent::ExecStart { job: 1, task: 0, worker: 0, t: 100 },
+                TraceEvent::ExecEnd { job: 1, task: 0, worker: 0, t: 300 },
+            ],
+            dropped: 0,
+        };
+        let text = prometheus_snapshot(&sink(), Some(&trace));
+        assert!(text.contains("compass_task_queue_wait_seconds_count 1"));
+        assert!(text.contains("compass_task_exec_seconds_count 1"));
+        assert!(text.contains("compass_trace_events_total 3"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut h = Histogram::new();
+        h.record(1); // bucket 1 (le 1µs)
+        h.record(1000); // bucket 10 (le 1023µs)
+        let mut out = String::new();
+        histogram(&mut out, "x_seconds", "test.", &h);
+        assert!(out.contains("x_seconds_bucket{le=\"0.000001\"} 1"));
+        assert!(out.contains("x_seconds_bucket{le=\"0.001023\"} 2"));
+        assert!(out.contains("x_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(out.contains("x_seconds_count 2"));
+    }
+}

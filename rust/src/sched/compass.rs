@@ -7,7 +7,7 @@
 //! task whose planned worker's queue wait exceeds `R(t,w) × threshold`.
 //! Both ablation switches of §6.3.1 are honored via `CompassConfig`.
 
-use super::{arrival_at, AssignCtx, ClusterView, Scheduler};
+use super::{arrival_at, AssignCtx, ClusterView, DecisionProbe, Scheduler};
 use crate::config::{CompassConfig, SchedulerKind};
 use crate::core::{Micros, TaskId, WorkerId};
 use crate::dfg::models::{mean_model_bytes, model_bytes};
@@ -64,7 +64,13 @@ impl Scheduler for Compass {
     }
 
     /// Algorithm 1 — Job Planning.
-    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+    fn plan_probed(
+        &self,
+        job: &Job,
+        dfg: &Dfg,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> Adfg {
         let n = dfg.len();
         let w_count = view.n_workers();
         // Line 2: worker_FT_map from the Global State Monitor.
@@ -74,6 +80,7 @@ impl Scheduler for Compass {
 
         // Lines 4-12: descending rank order (precomputed statically, §4.2.1).
         for &t in dfg.rank_order() {
+            probe.begin(t);
             // Hoist the worker-invariant fetch cost (Eq. 2 second arm) out
             // of the O(W) inner loop.
             let model = dfg.vertices[t].model;
@@ -105,6 +112,7 @@ impl Scheduler for Compass {
                     None => 0,
                 };
                 let ft = x + td_model + view.r(dfg, t, w);
+                probe.offer(w, ft);
                 if ft < best_ft {
                     best_ft = ft;
                     best_w = w;
@@ -120,20 +128,28 @@ impl Scheduler for Compass {
 
     /// Algorithm 2 — Task Dynamic Adjustment. Called when `ctx.task` becomes
     /// dispatchable on the worker that finished its (last) predecessor.
-    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId {
+    fn assign_probed(
+        &self,
+        ctx: &AssignCtx,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> WorkerId {
         let planned = ctx.planned.expect("compass plans every task");
         if !self.cfg.dynamic_adjust {
+            probe.offer(planned, 0);
             return planned;
         }
         // Line 3: join tasks cannot be moved without predecessor
         // coordination.
         if ctx.dfg.is_join(ctx.task) {
+            probe.offer(planned, 0);
             return planned;
         }
         // Line 2: FT(w) > R(t, w) * threshold ⇒ reschedule.
         let r_planned = view.r(ctx.dfg, ctx.task, planned);
         let above = view.wait(planned) as f64 > r_planned as f64 * self.cfg.adjust_threshold;
         if !above {
+            probe.offer(planned, view.wait(planned));
             return planned;
         }
         // Lines 6-12: rank workers by earliest finish for this task.
@@ -149,6 +165,7 @@ impl Scheduler for Compass {
             let ft = start
                 + self.td_model_est(ctx.dfg, ctx.task, w, view)
                 + view.r(ctx.dfg, ctx.task, w);
+            probe.offer(w, ft);
             if ft < best_ft {
                 best_ft = ft;
                 best = w;

@@ -5,7 +5,7 @@
 //! load balancer Cascade shipped before Navigator replaced it (§5), and
 //! the scalability foil of Figure 10.
 
-use super::{AssignCtx, ClusterView, Scheduler};
+use super::{AssignCtx, ClusterView, DecisionProbe, Scheduler};
 use crate::config::SchedulerKind;
 use crate::core::{hash_pair, WorkerId};
 use crate::dfg::{Adfg, Dfg, Job};
@@ -17,16 +17,32 @@ impl Scheduler for HashSched {
         SchedulerKind::Hash
     }
 
-    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+    fn plan_probed(
+        &self,
+        job: &Job,
+        dfg: &Dfg,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> Adfg {
         let mut adfg = Adfg::unassigned(dfg.len());
         for t in 0..dfg.len() {
-            adfg.set(t, (hash_pair(job.id, t as u64) % view.n_workers() as u64) as WorkerId);
+            let w = (hash_pair(job.id, t as u64) % view.n_workers() as u64) as WorkerId;
+            probe.begin(t);
+            probe.offer(w, 0);
+            adfg.set(t, w);
         }
         adfg
     }
 
-    fn assign(&self, ctx: &AssignCtx, _view: &ClusterView) -> WorkerId {
-        ctx.planned.expect("hash plans every task")
+    fn assign_probed(
+        &self,
+        ctx: &AssignCtx,
+        _view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> WorkerId {
+        let planned = ctx.planned.expect("hash plans every task");
+        probe.offer(planned, 0);
+        planned
     }
 }
 

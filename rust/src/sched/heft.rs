@@ -7,7 +7,7 @@
 //! locked at planning time). Within one job instance it still tracks its
 //! own processor-availability map, as classic HEFT does.
 
-use super::{AssignCtx, ClusterView, Scheduler};
+use super::{AssignCtx, ClusterView, DecisionProbe, Scheduler};
 use crate::config::SchedulerKind;
 use crate::core::{Micros, WorkerId};
 use crate::dfg::{Adfg, Dfg, Job};
@@ -19,7 +19,13 @@ impl Scheduler for Heft {
         SchedulerKind::Heft
     }
 
-    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+    fn plan_probed(
+        &self,
+        job: &Job,
+        dfg: &Dfg,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> Adfg {
         let n = dfg.len();
         let w_count = view.n_workers();
         // Per-job processor availability; starts at `now` everywhere —
@@ -29,6 +35,7 @@ impl Scheduler for Heft {
         let mut adfg = Adfg::unassigned(n);
 
         for &t in dfg.rank_order() {
+            probe.begin(t);
             let mut best_w = 0;
             let mut best_ft = Micros::MAX;
             for w in 0..w_count {
@@ -45,6 +52,7 @@ impl Scheduler for Heft {
                         .unwrap()
                 };
                 let eft = avail[w].max(at_inputs) + view.r(dfg, t, w);
+                probe.offer(w, eft);
                 if eft < best_ft {
                     best_ft = eft;
                     best_w = w;
@@ -58,8 +66,15 @@ impl Scheduler for Heft {
     }
 
     /// No adjustment phase: workers adhere to the locked schedule.
-    fn assign(&self, ctx: &AssignCtx, _view: &ClusterView) -> WorkerId {
-        ctx.planned.expect("HEFT plans every task")
+    fn assign_probed(
+        &self,
+        ctx: &AssignCtx,
+        _view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> WorkerId {
+        let planned = ctx.planned.expect("HEFT plans every task");
+        probe.offer(planned, 0);
+        planned
     }
 }
 

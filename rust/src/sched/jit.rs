@@ -7,7 +7,7 @@
 //! shows it beats HEFT/Hash under load but loses to Compass for lack of
 //! intra-job coordination.
 
-use super::{arrival_at, AssignCtx, ClusterView, Scheduler};
+use super::{arrival_at, AssignCtx, ClusterView, DecisionProbe, Scheduler};
 use crate::config::SchedulerKind;
 use crate::core::{Micros, WorkerId};
 use crate::dfg::models::model_bytes;
@@ -21,11 +21,22 @@ impl Scheduler for Jit {
     }
 
     /// JIT does not plan: every slot stays unassigned.
-    fn plan(&self, _job: &Job, dfg: &Dfg, _view: &ClusterView) -> Adfg {
+    fn plan_probed(
+        &self,
+        _job: &Job,
+        dfg: &Dfg,
+        _view: &ClusterView,
+        _probe: &mut DecisionProbe,
+    ) -> Adfg {
         Adfg::unassigned(dfg.len())
     }
 
-    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId {
+    fn assign_probed(
+        &self,
+        ctx: &AssignCtx,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> WorkerId {
         let avail: Vec<Micros> = vec![view.now; ctx.pred_outputs.len()];
         let mut best = view.self_worker;
         let mut best_start = Micros::MAX;
@@ -38,6 +49,7 @@ impl Scheduler for Jit {
                 _ => 0,
             };
             let start = view.ft(w).max(arrive) + td_model;
+            probe.offer(w, start);
             if start < best_start {
                 best_start = start;
                 best = w;

@@ -19,6 +19,7 @@ use crate::config::{ClusterConfig, SchedulerKind};
 use crate::core::{Micros, TaskId, WorkerId};
 use crate::dfg::{Adfg, Dfg, Job};
 use crate::net::CostModel;
+use crate::obs::CandidateSet;
 use crate::sst::SstRow;
 
 /// What a scheduling decision can see: the *published* SST rows (with the
@@ -72,14 +73,112 @@ pub struct AssignCtx<'a> {
     pub pred_outputs: &'a [(WorkerId, u64)],
 }
 
+/// Collects the candidate workers a scheduler scored while deciding, for
+/// the observability layer ([`crate::obs`]). An inactive probe makes every
+/// hook a branch-and-return, so uninstrumented callers pay ~nothing.
+///
+/// Decisions are grouped per task: `begin(t)` opens a task's candidate set
+/// (flushing the previous one), `offer(w, score)` records one scored
+/// candidate, and `take_records` / `take_single` hand the sets back to the
+/// caller that emits [`crate::obs::TraceEvent::Decision`] events.
+#[derive(Debug, Default)]
+pub struct DecisionProbe {
+    active: bool,
+    started: bool,
+    cur_task: TaskId,
+    cur: CandidateSet,
+    records: Vec<(TaskId, CandidateSet)>,
+}
+
+impl DecisionProbe {
+    /// The no-op probe used by the default `plan`/`assign` trait methods.
+    pub fn off() -> DecisionProbe {
+        DecisionProbe::default()
+    }
+
+    pub fn on() -> DecisionProbe {
+        DecisionProbe { active: true, ..DecisionProbe::default() }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Open the candidate set for `task`, flushing any previous one.
+    #[inline]
+    pub fn begin(&mut self, task: TaskId) {
+        if !self.active {
+            return;
+        }
+        self.flush();
+        self.started = true;
+        self.cur_task = task;
+    }
+
+    /// Record one scored candidate (lower score = better).
+    #[inline]
+    pub fn offer(&mut self, w: WorkerId, score_us: Micros) {
+        if !self.active {
+            return;
+        }
+        // Schedulers that only ever decide one task (assign hooks) may skip
+        // `begin`; open an anonymous set for them.
+        self.started = true;
+        self.cur.push(w as u16, score_us);
+    }
+
+    fn flush(&mut self) {
+        if self.started {
+            self.records.push((self.cur_task, self.cur));
+            self.cur = CandidateSet::default();
+            self.started = false;
+        }
+    }
+
+    /// All (task, candidates) sets recorded since the last take.
+    pub fn take_records(&mut self) -> Vec<(TaskId, CandidateSet)> {
+        self.flush();
+        std::mem::take(&mut self.records)
+    }
+
+    /// The single candidate set of a one-task decision (assign hooks).
+    pub fn take_single(&mut self) -> CandidateSet {
+        self.flush();
+        self.records.pop().map(|(_, c)| c).unwrap_or_default()
+    }
+}
+
 pub trait Scheduler: Send + Sync {
     fn kind(&self) -> SchedulerKind;
 
+    /// Job-instance planning phase with decision probing: produce the
+    /// initial ADFG, offering every scored candidate to `probe`.
+    fn plan_probed(
+        &self,
+        job: &Job,
+        dfg: &Dfg,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> Adfg;
+
+    /// Task is dispatchable: confirm or change its worker, offering every
+    /// scored candidate to `probe`.
+    fn assign_probed(
+        &self,
+        ctx: &AssignCtx,
+        view: &ClusterView,
+        probe: &mut DecisionProbe,
+    ) -> WorkerId;
+
     /// Job-instance planning phase: produce the initial ADFG.
-    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg;
+    fn plan(&self, job: &Job, dfg: &Dfg, view: &ClusterView) -> Adfg {
+        self.plan_probed(job, dfg, view, &mut DecisionProbe::off())
+    }
 
     /// Task is dispatchable: confirm or change its worker.
-    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId;
+    fn assign(&self, ctx: &AssignCtx, view: &ClusterView) -> WorkerId {
+        self.assign_probed(ctx, view, &mut DecisionProbe::off())
+    }
 }
 
 /// Instantiate the configured scheduler.
@@ -164,5 +263,82 @@ mod tests {
             let cfg = ClusterConfig::default().with_scheduler(kind);
             assert_eq!(build(&cfg).kind(), kind);
         }
+    }
+
+    #[test]
+    fn inactive_probe_records_nothing() {
+        let mut p = DecisionProbe::off();
+        p.begin(3);
+        p.offer(1, 100);
+        assert!(p.take_records().is_empty());
+        assert!(p.take_single().is_empty());
+    }
+
+    #[test]
+    fn probe_groups_offers_per_task() {
+        let mut p = DecisionProbe::on();
+        p.begin(0);
+        p.offer(0, 50);
+        p.offer(1, 40);
+        p.begin(1);
+        p.offer(2, 30);
+        let recs = p.take_records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].0, 0);
+        assert_eq!(recs[0].1.len(), 2);
+        assert_eq!(recs[1].0, 1);
+        assert!(recs[1].1.contains(2));
+        // Taking again yields nothing.
+        assert!(p.take_records().is_empty());
+    }
+
+    #[test]
+    fn every_scheduler_offers_candidates() {
+        use crate::dfg::pipelines;
+        let cost = CostModel::default();
+        let dfg = pipelines::vpa(&cost);
+        let r = rows(3);
+        let speed = vec![1.0; 3];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
+        for kind in SchedulerKind::ALL {
+            let cfg = ClusterConfig::default().with_scheduler(kind);
+            let sched = build(&cfg);
+            let mut probe = DecisionProbe::on();
+            let adfg = sched.plan_probed(&job, &dfg, &view, &mut probe);
+            let plan_recs = probe.take_records();
+            if kind != SchedulerKind::Jit {
+                assert_eq!(plan_recs.len(), dfg.len(), "{kind:?} plans every task");
+                assert!(plan_recs.iter().all(|(_, c)| !c.is_empty()));
+            }
+            let outs = [(0usize, 100u64)];
+            let ctx = AssignCtx {
+                job: &job,
+                dfg: &dfg,
+                task: 1,
+                planned: adfg.get(1),
+                pred_outputs: &outs,
+            };
+            let mut probe = DecisionProbe::on();
+            let chosen = sched.assign_probed(&ctx, &view, &mut probe);
+            let cands = probe.take_single();
+            assert!(!cands.is_empty(), "{kind:?} assign offers candidates");
+            assert!(cands.contains(chosen as u16), "{kind:?} chosen worker is a candidate");
+        }
+    }
+
+    #[test]
+    fn default_plan_matches_probed() {
+        let cost = CostModel::default();
+        let dfg = crate::dfg::pipelines::translation(&cost);
+        let r = rows(4);
+        let speed = vec![1.0; 4];
+        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        let job = Job { id: 9, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
+        let cfg = ClusterConfig::default();
+        let sched = build(&cfg);
+        let a = sched.plan(&job, &dfg, &view);
+        let b = sched.plan_probed(&job, &dfg, &view, &mut DecisionProbe::on());
+        assert_eq!(a.assignment, b.assignment, "probing must not change decisions");
     }
 }

@@ -18,9 +18,11 @@ use crate::config::ClusterConfig;
 use crate::core::{hash_pair, Micros, ModelId, TaskId, WorkerId};
 use crate::dfg::models::model_bytes;
 use crate::dfg::{pipelines, Adfg, Dfg, Job};
+use crate::gpu::CacheEventKind;
 use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
+use crate::obs::{SchedPhase, Trace, TraceEvent, Tracer};
 use crate::profiles::ProfileRepository;
-use crate::sched::{self, AssignCtx, ClusterView, Scheduler};
+use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, Scheduler};
 use crate::sst::{Sst, SstRow};
 use crate::util::rng::Rng;
 use std::cmp::Reverse;
@@ -88,6 +90,8 @@ pub struct SimReport {
     pub metrics: MetricsSink,
     pub events_processed: u64,
     pub sim_span_us: Micros,
+    /// Structured event trace; empty unless `cfg.trace.enabled`.
+    pub trace: Trace,
 }
 
 pub struct Simulator {
@@ -110,6 +114,7 @@ pub struct Simulator {
     /// Online Workflow Profiles Repository (§3.1); None when static.
     profiles: Option<ProfileRepository>,
     events_processed: u64,
+    tracer: Tracer,
 }
 
 impl Simulator {
@@ -144,6 +149,7 @@ impl Simulator {
             true_runtimes,
             profiles,
             events_processed: 0,
+            tracer: Tracer::from_config(cfg.trace),
             cfg,
         }
     }
@@ -178,6 +184,8 @@ impl Simulator {
     /// `on_worker`, then dispatch the ADFG message and the input transfers.
     fn assign_and_dispatch(&mut self, job_idx: usize, task: TaskId, on_worker: WorkerId) {
         self.view_rows(on_worker);
+        let mut probe =
+            if self.tracer.on() { DecisionProbe::on() } else { DecisionProbe::off() };
         // Gather immutable facts before mutating.
         let (pred_outputs, target) = {
             let rows = &self.rows_scratch;
@@ -207,8 +215,20 @@ impl Simulator {
                 planned: js.adfg.get(task),
                 pred_outputs: &pred_outputs,
             };
-            (pred_outputs.clone(), self.scheduler.assign(&ctx, &view))
+            (pred_outputs.clone(), self.scheduler.assign_probed(&ctx, &view, &mut probe))
         };
+
+        if probe.is_active() {
+            self.tracer.record(TraceEvent::Decision {
+                job: self.jobs[job_idx].job.id,
+                task: task as u16,
+                phase: SchedPhase::Adjust,
+                decider: on_worker as u16,
+                chosen: target as u16,
+                candidates: probe.take_single(),
+                t: self.now,
+            });
+        }
 
         self.jobs[job_idx].adfg.set(task, target);
 
@@ -245,6 +265,25 @@ impl Simulator {
             (hash_pair(self.jobs[job_idx].job.id, INGRESS_SALT) % self.cfg.n_workers as u64)
                 as WorkerId;
         self.view_rows(ingress);
+        if self.tracer.on() {
+            let (id, kind) = {
+                let j = &self.jobs[job_idx].job;
+                (j.id, j.kind)
+            };
+            self.tracer.record(TraceEvent::JobArrive { job: id, kind, t: self.now });
+            // Sample how stale the SST view feeding this plan was (§5.2).
+            for w in 0..self.cfg.n_workers {
+                let (load, cache) = self.sst.staleness_of(w, self.now);
+                self.tracer.record(TraceEvent::SstStaleness {
+                    worker: w as u16,
+                    load_staleness_us: load,
+                    cache_staleness_us: cache,
+                    t: self.now,
+                });
+            }
+        }
+        let mut probe =
+            if self.tracer.on() { DecisionProbe::on() } else { DecisionProbe::off() };
         let adfg = {
             let js = &self.jobs[job_idx];
             let dfg = &self.dfgs[js.job.kind.index()];
@@ -256,8 +295,23 @@ impl Simulator {
                 speed: &self.speed,
             };
             // Planning phase: the initial ADFG (§4.2).
-            self.scheduler.plan(&js.job, dfg, &view)
+            self.scheduler.plan_probed(&js.job, dfg, &view, &mut probe)
         };
+        if probe.is_active() {
+            let job = self.jobs[job_idx].job.id;
+            for (task, candidates) in probe.take_records() {
+                let chosen = adfg.get(task).unwrap_or(ingress);
+                self.tracer.record(TraceEvent::Decision {
+                    job,
+                    task: task as u16,
+                    phase: SchedPhase::Plan,
+                    decider: ingress as u16,
+                    chosen: chosen as u16,
+                    candidates,
+                    t: self.now,
+                });
+            }
+        }
         self.jobs[job_idx].adfg = adfg;
         // The entry task is dispatchable immediately.
         let entry = self.dfgs[self.jobs[job_idx].job.kind.index()].entry;
@@ -266,6 +320,14 @@ impl Simulator {
 
     fn handle_exec_done(&mut self, w: WorkerId, job_idx: usize, task: TaskId) {
         let finished = self.workers[w].finish_task(self.now);
+        if self.tracer.on() {
+            self.tracer.record(TraceEvent::ExecEnd {
+                job: self.jobs[job_idx].job.id,
+                task: task as u16,
+                worker: w as u16,
+                t: self.now,
+            });
+        }
         let dfg_idx = self.jobs[job_idx].job.kind.index();
         // Online profile refinement (§3.1): feed the observed runtime back
         // so R(t, ·) estimates converge even when the static profile lies.
@@ -296,6 +358,14 @@ impl Simulator {
                 completion_us: self.now,
                 lower_bound_us: self.dfgs[dfg_idx].lower_bound_us,
             });
+            if self.tracer.on() {
+                self.tracer.record(TraceEvent::JobComplete {
+                    job: js.job.id,
+                    kind: js.job.kind,
+                    latency_us: self.now - js.job.arrival_us,
+                    t: self.now,
+                });
+            }
         }
 
         for (slot, &s) in succs.iter().enumerate() {
@@ -388,22 +458,33 @@ impl Simulator {
             for v in victims {
                 self.workers[w].gpu.evict(v, now);
             }
-            self.workers[w].gpu.record_miss();
+            self.workers[w].gpu.record_miss(m, now);
             self.workers[w].mark_caused_fetch(i);
             self.workers[w].begin_fetch(m);
+            if self.tracer.on() {
+                self.tracer.record(TraceEvent::FetchStart { worker: w as u16, model: m, t: now });
+            }
             let td = self.cfg.cost.td_model(model_bytes(m));
             self.push_event(now + td, Event::FetchDone { w, model: m });
         }
 
         if let Some((mut i, job_idx, task, end, caused_fetch, model)) = start {
-            if model.is_some() && !caused_fetch {
-                self.workers[w].gpu.record_hit();
+            if let (Some(m), false) = (model, caused_fetch) {
+                self.workers[w].gpu.record_hit(m, now);
             }
             // The fetch marking above didn't reorder the queue, so index i
             // is still valid (eviction doesn't touch the queue).
             debug_assert_eq!(self.workers[w].queue()[i].task, task);
             let _ = &mut i;
             self.workers[w].start_task(i, now, end);
+            if self.tracer.on() {
+                self.tracer.record(TraceEvent::ExecStart {
+                    job: self.jobs[job_idx].job.id,
+                    task: task as u16,
+                    worker: w as u16,
+                    t: now,
+                });
+            }
             self.push_event(end, Event::ExecDone { w, job_idx, task });
         }
     }
@@ -432,6 +513,14 @@ impl Simulator {
             runtime_us: runtime,
             caused_fetch: false,
         });
+        if self.tracer.on() {
+            self.tracer.record(TraceEvent::TaskEnqueue {
+                job: self.jobs[job_idx].job.id,
+                task: task as u16,
+                worker: w as u16,
+                t: self.now,
+            });
+        }
         self.try_dispatch(w);
     }
 
@@ -470,6 +559,13 @@ impl Simulator {
                 }
                 Event::FetchDone { w, model } => {
                     self.workers[w].finish_fetch(model, self.now);
+                    if self.tracer.on() {
+                        self.tracer.record(TraceEvent::FetchEnd {
+                            worker: w as u16,
+                            model,
+                            t: self.now,
+                        });
+                    }
                     self.try_dispatch(w);
                 }
                 Event::ExecDone { w, job_idx, task } => self.handle_exec_done(w, job_idx, task),
@@ -495,6 +591,32 @@ impl Simulator {
             }
         }
 
+        // Merge each worker's cache event log into the trace. These carry
+        // their original timestamps; Chrome/Perfetto don't require the
+        // event stream to be globally time-sorted.
+        if self.tracer.on() {
+            for w in 0..self.workers.len() {
+                for ev in self.workers[w].gpu.drain_log() {
+                    let worker = w as u16;
+                    let (model, free_bytes, t) = (ev.model, ev.free_bytes, ev.at_us);
+                    self.tracer.record(match ev.kind {
+                        CacheEventKind::Hit => {
+                            TraceEvent::CacheHit { worker, model, free_bytes, t }
+                        }
+                        CacheEventKind::Miss => {
+                            TraceEvent::CacheMiss { worker, model, free_bytes, t }
+                        }
+                        CacheEventKind::Insert => {
+                            TraceEvent::CacheInsert { worker, model, free_bytes, t }
+                        }
+                        CacheEventKind::Evict => {
+                            TraceEvent::CacheEvict { worker, model, free_bytes, t }
+                        }
+                    });
+                }
+            }
+        }
+
         let span = self.now;
         let workers: Vec<WorkerMetrics> =
             self.workers.iter_mut().map(|wk| wk.metrics(span)).collect();
@@ -507,6 +629,7 @@ impl Simulator {
             },
             events_processed: self.events_processed,
             sim_span_us: span,
+            trace: self.tracer.take(),
         }
     }
 
@@ -592,6 +715,38 @@ mod tests {
             high.metrics.mean_slowdown(),
             low.metrics.mean_slowdown()
         );
+    }
+
+    #[test]
+    fn trace_is_empty_when_disabled() {
+        let rep = Simulator::simulate(
+            ClusterConfig::default(),
+            workload::poisson(1.0, 10, &[], 3),
+        );
+        assert!(rep.trace.is_empty());
+        assert_eq!(rep.trace.dropped, 0);
+    }
+
+    #[test]
+    fn traced_run_records_spans_and_decisions() {
+        let mut cfg = ClusterConfig::default();
+        cfg.trace.enabled = true;
+        let rep = Simulator::simulate(cfg, workload::poisson(1.0, 10, &[], 3));
+        let t = &rep.trace;
+        assert_eq!(rep.metrics.incomplete, 0);
+        assert_eq!(
+            t.count(|e| matches!(e, TraceEvent::JobComplete { .. })),
+            rep.metrics.jobs.len()
+        );
+        // Every executed task yields a complete Enqueue→Start→End span.
+        let ends = t.count(|e| matches!(e, TraceEvent::ExecEnd { .. }));
+        assert_eq!(t.task_spans().len(), ends);
+        assert!(ends >= rep.metrics.jobs.len());
+        // Cold caches force at least one fetch, and decisions were probed.
+        assert!(!t.fetch_spans().is_empty());
+        assert!(t.count(|e| matches!(e, TraceEvent::Decision { .. })) > 0);
+        assert!(t.count(|e| matches!(e, TraceEvent::CacheInsert { .. })) > 0);
+        assert!(t.count(|e| matches!(e, TraceEvent::SstStaleness { .. })) > 0);
     }
 
     #[test]

@@ -36,9 +36,12 @@ pub struct SimWorker {
 
 impl SimWorker {
     pub fn new(id: WorkerId, cfg: &ClusterConfig, rng: Rng) -> SimWorker {
+        let mut gpu = GpuCache::new(cfg.gpu_capacity, cfg.eviction);
+        // Cache hit/miss/evict events flow into the trace via drain_log.
+        gpu.set_logging(cfg.trace.enabled);
         SimWorker {
             id,
-            gpu: GpuCache::new(cfg.gpu_capacity, cfg.eviction),
+            gpu,
             queue: VecDeque::new(),
             running: None,
             exec_end: 0,

@@ -72,6 +72,18 @@ impl Sst {
     pub fn max_load_staleness(&self, now: Micros) -> Micros {
         self.rows.iter().map(|r| now.saturating_sub(r.load_pushed_at)).max().unwrap_or(0)
     }
+
+    /// Worst-case cache-information staleness across peers as seen at `now`.
+    pub fn max_cache_staleness(&self, now: Micros) -> Micros {
+        self.rows.iter().map(|r| now.saturating_sub(r.cache_pushed_at)).max().unwrap_or(0)
+    }
+
+    /// Per-row staleness of both halves at `now`: (load, cache), µs — the
+    /// observability layer samples these into SstStaleness events.
+    pub fn staleness_of(&self, w: WorkerId, now: Micros) -> (Micros, Micros) {
+        let r = &self.rows[w];
+        (now.saturating_sub(r.load_pushed_at), now.saturating_sub(r.cache_pushed_at))
+    }
 }
 
 /// Push-rate limiter configuration (§5.2: experiments justify 5 pushes/s;
@@ -133,6 +145,17 @@ mod tests {
         sst.push_load(0, 0, 100);
         sst.push_load(1, 0, 300);
         assert_eq!(sst.max_load_staleness(500), 400);
+    }
+
+    #[test]
+    fn cache_staleness_tracks_cache_pushes_only() {
+        let mut sst = Sst::new(2);
+        sst.push_cache(0, 0, 0, 100);
+        sst.push_cache(1, 0, 0, 250);
+        sst.push_load(0, 0, 490); // must not affect the cache axis
+        assert_eq!(sst.max_cache_staleness(500), 400);
+        assert_eq!(sst.staleness_of(0, 500), (10, 400));
+        assert_eq!(sst.staleness_of(1, 500), (500, 250));
     }
 
     #[test]

@@ -60,6 +60,11 @@ impl Args {
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    /// An option interpreted as a filesystem path (e.g. `--trace-out FILE`).
+    pub fn get_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
 }
 
 #[cfg(test)]
@@ -92,5 +97,12 @@ mod tests {
         let a = args(&[]);
         assert_eq!(a.get_f64("rate", 2.0), 2.0);
         assert_eq!(a.get_or("mode", "sim"), "sim");
+    }
+
+    #[test]
+    fn path_options() {
+        let a = args(&["--trace-out", "out/trace.json"]);
+        assert_eq!(a.get_path("trace-out"), Some(std::path::PathBuf::from("out/trace.json")));
+        assert_eq!(a.get_path("metrics-out"), None);
     }
 }

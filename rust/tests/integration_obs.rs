@@ -1,0 +1,145 @@
+//! End-to-end observability pipeline: traced simulation → span/decision
+//! integrity → Chrome trace_event export → Prometheus snapshot.
+
+use compass::config::ClusterConfig;
+use compass::obs::chrome::chrome_trace;
+use compass::obs::prom::prometheus_snapshot;
+use compass::obs::TraceEvent;
+use compass::util::json::Json;
+use compass::{workload, SimReport, Simulator};
+
+fn traced_run() -> SimReport {
+    let mut cfg = ClusterConfig::default();
+    cfg.trace.enabled = true;
+    Simulator::simulate(cfg, workload::poisson(2.0, 25, &[], 17))
+}
+
+#[test]
+fn span_counts_match_completed_work() {
+    let rep = traced_run();
+    assert_eq!(rep.metrics.incomplete, 0);
+    let t = &rep.trace;
+    assert_eq!(t.dropped, 0, "25 jobs must fit the default ring");
+
+    // One JobArrive and one JobComplete per job.
+    let arrives = t.count(|e| matches!(e, TraceEvent::JobArrive { .. }));
+    let completes = t.count(|e| matches!(e, TraceEvent::JobComplete { .. }));
+    assert_eq!(arrives, rep.metrics.jobs.len());
+    assert_eq!(completes, rep.metrics.jobs.len());
+
+    // Every ExecStart has its ExecEnd and TaskEnqueue: full spans.
+    let starts = t.count(|e| matches!(e, TraceEvent::ExecStart { .. }));
+    let ends = t.count(|e| matches!(e, TraceEvent::ExecEnd { .. }));
+    assert_eq!(starts, ends);
+    let spans = t.task_spans();
+    assert_eq!(spans.len(), ends);
+    // Tasks per job ≥ 1, so spans ≥ jobs; ordering within each span holds.
+    assert!(spans.len() >= rep.metrics.jobs.len());
+    for s in &spans {
+        assert!(s.enqueue_us <= s.start_us && s.start_us <= s.end_us);
+    }
+
+    // Fetch spans pair up and match the miss count (each miss = one fetch).
+    let fetch_starts = t.count(|e| matches!(e, TraceEvent::FetchStart { .. }));
+    let fetch_ends = t.count(|e| matches!(e, TraceEvent::FetchEnd { .. }));
+    assert_eq!(fetch_starts, fetch_ends);
+    assert_eq!(t.fetch_spans().len(), fetch_ends);
+    let misses: u64 = rep.metrics.workers.iter().map(|w| w.misses).sum();
+    assert_eq!(fetch_starts as u64, misses);
+
+    // Cache accounting in the trace matches the aggregate counters.
+    let hits: u64 = rep.metrics.workers.iter().map(|w| w.hits).sum();
+    assert_eq!(t.count(|e| matches!(e, TraceEvent::CacheHit { .. })) as u64, hits);
+    assert_eq!(t.count(|e| matches!(e, TraceEvent::CacheMiss { .. })) as u64, misses);
+}
+
+#[test]
+fn decisions_carry_scored_candidates() {
+    let rep = traced_run();
+    let mut plan = 0;
+    let mut adjust = 0;
+    for ev in &rep.trace.events {
+        if let TraceEvent::Decision { phase, chosen, candidates, .. } = ev {
+            match phase {
+                compass::obs::SchedPhase::Plan => plan += 1,
+                compass::obs::SchedPhase::Adjust => adjust += 1,
+            }
+            assert!(!candidates.is_empty(), "every decision scored someone");
+            assert!(candidates.total as usize >= candidates.len());
+            // Compass always scores the worker it picks.
+            assert!(candidates.contains(*chosen), "chosen {chosen} not among candidates");
+        }
+    }
+    assert!(plan > 0, "planning decisions recorded");
+    assert!(adjust > 0, "adjustment decisions recorded");
+}
+
+#[test]
+fn chrome_export_is_valid_and_complete() {
+    let rep = traced_run();
+    let out = chrome_trace(&rep.trace);
+    let json = Json::parse(&out).expect("exporter must emit valid JSON");
+    let events = json.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let mut cats = std::collections::BTreeSet::new();
+    let mut decision_with_scores = false;
+    for ev in events {
+        if let Some(cat) = ev.get("cat").and_then(|c| c.as_str()) {
+            cats.insert(cat.to_string());
+        }
+        if ev.get("cat").and_then(|c| c.as_str()) == Some("sched") {
+            let args = ev.get("args").expect("decision args");
+            let cands = args.get("candidates").and_then(|c| c.as_arr()).expect("candidates");
+            if cands.iter().any(|c| c.get("score_us").and_then(|s| s.as_u64()).is_some()) {
+                decision_with_scores = true;
+            }
+        }
+    }
+    // The acceptance criterion: queue / fetch / execute phases + decisions.
+    for want in ["queue", "exec", "fetch", "sched", "job"] {
+        assert!(cats.contains(want), "missing category {want}; have {cats:?}");
+    }
+    assert!(decision_with_scores, "decision events must carry candidate scores");
+}
+
+#[test]
+fn prometheus_snapshot_covers_phases() {
+    let rep = traced_run();
+    let out = prometheus_snapshot(&rep.metrics, Some(&rep.trace));
+    for series in [
+        "compass_jobs_completed_total",
+        "compass_job_latency_seconds_bucket",
+        "compass_task_queue_wait_seconds_count",
+        "compass_task_exec_seconds_count",
+        "compass_model_fetch_seconds_count",
+        "compass_sst_staleness_seconds_count",
+        "compass_worker_cache_hits_total",
+    ] {
+        assert!(out.contains(series), "missing series {series}");
+    }
+    // Exactly one completed job per JobComplete event.
+    let line = out
+        .lines()
+        .find(|l| l.starts_with("compass_jobs_completed_total "))
+        .expect("jobs completed sample");
+    let v: f64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    assert_eq!(v as usize, rep.metrics.jobs.len());
+}
+
+#[test]
+fn disabled_tracing_yields_empty_trace_and_same_results() {
+    let jobs = workload::poisson(2.0, 25, &[], 17);
+    let off = Simulator::simulate(ClusterConfig::default(), jobs.clone());
+    assert!(off.trace.is_empty());
+
+    // Tracing must be observe-only: identical scheduling with it on.
+    let mut cfg = ClusterConfig::default();
+    cfg.trace.enabled = true;
+    let on = Simulator::simulate(cfg, jobs);
+    assert_eq!(off.events_processed, on.events_processed);
+    assert_eq!(off.sim_span_us, on.sim_span_us);
+    let lat_off: Vec<_> = off.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+    let lat_on: Vec<_> = on.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+    assert_eq!(lat_off, lat_on);
+}
