@@ -6,13 +6,18 @@
 //!   * The simulator event loop — events/second (the scalability experiment
 //!     pushes hundreds of thousands of events per run).
 //!   * GPU eviction planning — runs on every model fetch.
+//!
+//! All fixtures (views, scratch cells, workloads, configs) are built once,
+//! outside the timed closures — the closures measure only the hot path, not
+//! setup clones. `--json FILE` appends machine-readable reports.
 
 use compass::config::{ClusterConfig, SchedulerKind};
 use compass::dfg::{pipelines, Job, PipelineKind};
 use compass::net::CostModel;
-use compass::sched::{self, AssignCtx, ClusterView};
+use compass::sched::{self, AssignCtx, ClusterView, PlanCell};
 use compass::sst::SstRow;
-use compass::util::bench::Bench;
+use compass::util::args::Args;
+use compass::util::bench::{self, Bench, BenchReport};
 use compass::util::rng::Rng;
 use compass::{workload, Simulator};
 
@@ -29,8 +34,10 @@ fn rows(n: usize, rng: &mut Rng) -> Vec<SstRow> {
 }
 
 fn main() {
+    let args = Args::from_env();
     let cost = CostModel::default();
     let mut rng = Rng::new(7);
+    let mut reports: Vec<BenchReport> = Vec::new();
 
     // --- Algorithm 1 planning at paper scale (5 workers) and large scale.
     for &(n_workers, label) in
@@ -42,16 +49,16 @@ fn main() {
         let r = rows(n_workers, &mut rng);
         let speed = vec![1.0; n_workers];
         let job = Job { id: 1, kind: PipelineKind::Translation, arrival_us: 0, input_bytes: 1000 };
-        Bench::new(label).run(|| {
-            let view = ClusterView {
-                now: 1_000_000,
-                self_worker: 0,
-                rows: &r,
-                cost: &cost,
-                speed: &speed,
-            };
-            sched.plan(&job, &dfg, &view)
-        });
+        let scratch = PlanCell::default();
+        let view = ClusterView {
+            now: 1_000_000,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &scratch,
+        };
+        reports.push(Bench::new(label).run(|| sched.plan(&job, &dfg, &view)));
     }
 
     // --- Algorithm 2 dynamic adjustment (reschedule path).
@@ -65,31 +72,33 @@ fn main() {
         let speed = vec![1.0; n_workers];
         let job = Job { id: 1, kind: PipelineKind::Vpa, arrival_us: 0, input_bytes: 1000 };
         let outs = [(0usize, 4096u64)];
-        Bench::new("adjust_alg2_reschedule_w5").run(|| {
-            let view = ClusterView {
-                now: 1_000_000,
-                self_worker: 0,
-                rows: &r,
-                cost: &cost,
-                speed: &speed,
-            };
-            let ctx =
-                AssignCtx { job: &job, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
-            sched.assign(&ctx, &view)
-        });
+        let scratch = PlanCell::default();
+        let view = ClusterView {
+            now: 1_000_000,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &scratch,
+        };
+        let ctx = AssignCtx { job: &job, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };
+        reports.push(Bench::new("adjust_alg2_reschedule_w5").run(|| sched.assign(&ctx, &view)));
     }
 
     // --- Simulator event-loop throughput at paper scale.
     {
         let jobs = workload::poisson(2.0, 300, &[], 3);
-        let events = Simulator::simulate(ClusterConfig::default(), jobs.clone()).events_processed;
+        let cfg = ClusterConfig::default();
+        let events = Simulator::simulate_ref(&cfg, &jobs).events_processed;
         let b = Bench::new("sim_300_jobs_5_workers")
-            .run(|| Simulator::simulate(ClusterConfig::default(), jobs.clone()));
+            .run(|| Simulator::simulate_ref(&cfg, &jobs))
+            .with_events(events);
         println!(
             "  -> ~{:.2} M events/s ({} events per run)",
-            events as f64 / (b.median_ns / 1e9) / 1e6,
+            b.events_per_sec.unwrap_or(0.0) / 1e6,
             events
         );
+        reports.push(b);
     }
 
     // --- Same workload with the event tracer on: measures observability
@@ -99,29 +108,29 @@ fn main() {
         let jobs = workload::poisson(2.0, 300, &[], 3);
         let mut cfg = ClusterConfig::default();
         cfg.trace.enabled = true;
+        let events = Simulator::simulate_ref(&cfg, &jobs).events_processed;
         let b = Bench::new("sim_300_jobs_traced")
-            .run(|| Simulator::simulate(cfg.clone(), jobs.clone()));
-        let n_events =
-            Simulator::simulate(cfg.clone(), jobs.clone()).trace.events.len();
-        println!(
-            "  -> {} trace events per run, median {:.2} ms",
-            n_events,
-            b.median_ns / 1e6
-        );
+            .run(|| Simulator::simulate_ref(&cfg, &jobs))
+            .with_events(events);
+        let n_events = Simulator::simulate_ref(&cfg, &jobs).trace.events.len();
+        println!("  -> {} trace events per run, median {:.2} ms", n_events, b.median_ns / 1e6);
+        reports.push(b);
     }
 
     // --- Scale stress: 100 workers, 40 req/s (Fig. 10 inner loop).
     {
         let jobs = workload::poisson(40.0, 1000, &[], 4);
         let cfg = ClusterConfig::default().with_workers(100);
-        let events = Simulator::simulate(cfg.clone(), jobs.clone()).events_processed;
+        let events = Simulator::simulate_ref(&cfg, &jobs).events_processed;
         let b = Bench::new("sim_1000_jobs_100_workers")
-            .run(|| Simulator::simulate(cfg.clone(), jobs.clone()));
+            .run(|| Simulator::simulate_ref(&cfg, &jobs))
+            .with_events(events);
         println!(
             "  -> ~{:.2} M events/s ({} events per run)",
-            events as f64 / (b.median_ns / 1e9) / 1e6,
+            b.events_per_sec.unwrap_or(0.0) / 1e6,
             events
         );
+        reports.push(b);
     }
 
     // --- GPU cache eviction planning (queue-lookahead).
@@ -133,8 +142,10 @@ fn main() {
         cache.insert(2, 0);
         cache.insert(1, 0);
         let lookahead: Vec<u8> = (0..32).map(|i| (i % 8) as u8).collect();
-        Bench::new("gpu_plan_eviction_lookahead")
-            .run(|| cache.plan_eviction(5_000_000_000, &lookahead));
+        reports.push(
+            Bench::new("gpu_plan_eviction_lookahead")
+                .run(|| cache.plan_eviction(5_000_000_000, &lookahead)),
+        );
     }
 
     // --- Hash scheduler plan (baseline floor for plan cost).
@@ -145,12 +156,21 @@ fn main() {
         let r = rows(5, &mut rng);
         let speed = vec![1.0; 5];
         let job = Job { id: 9, kind: PipelineKind::Perception, arrival_us: 0, input_bytes: 1000 };
-        Bench::new("plan_hash_baseline_w5").run(|| {
-            let view =
-                ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
-            sched.plan(&job, &dfg, &view)
-        });
+        let scratch = PlanCell::default();
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &scratch,
+        };
+        reports.push(Bench::new("plan_hash_baseline_w5").run(|| sched.plan(&job, &dfg, &view)));
     }
 
+    if let Some(path) = args.get_path("json") {
+        bench::write_json(&path, &reports).expect("write bench json");
+        println!("\n{} bench reports written to {}", reports.len(), path.display());
+    }
     println!("\nall micro benches complete");
 }

@@ -2,26 +2,38 @@
 //!
 //! Each bench regenerates a (quick-scale) version of the corresponding §6
 //! artifact and reports wall time. The printed experiment output itself is
-//! the reproduction; EXPERIMENTS.md quotes both.
+//! the reproduction; EXPERIMENTS.md quotes both. `--json FILE` appends
+//! machine-readable reports (merged with the micro-bench binary's).
 
 use compass::exp::{self, Scale};
-use compass::util::bench::Bench;
+use compass::util::args::Args;
+use compass::util::bench::{self, Bench, BenchReport};
 
 fn main() {
+    let args = Args::from_env();
     let scale = Scale::quick();
+    let mut reports: Vec<BenchReport> = Vec::new();
 
     println!("\n################ paper experiment benches ################\n");
 
-    Bench::quick("fig6a_low_load_boxes")
-        .run(|| exp::fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)"));
-    Bench::quick("fig6b_high_load_boxes")
-        .run(|| exp::fig6::boxes(2.0, scale, "Figure 6b — high load (2 req/s)"));
-    Bench::quick("fig6c_rate_sweep").run(|| exp::fig6::rate_sweep(scale));
-    Bench::quick("table1_metrics").run(|| exp::table1::run(scale));
-    Bench::quick("fig7_ablation").run(|| exp::fig7::run(scale));
-    Bench::quick("fig8_staleness").run(|| exp::fig8::run(scale));
-    Bench::quick("fig9_trace").run(|| exp::fig9::run(scale));
-    Bench::quick("fig10_scalability").run(|| exp::fig10::run(scale, true));
+    reports.push(
+        Bench::quick("fig6a_low_load_boxes")
+            .run(|| exp::fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)")),
+    );
+    reports.push(
+        Bench::quick("fig6b_high_load_boxes")
+            .run(|| exp::fig6::boxes(2.0, scale, "Figure 6b — high load (2 req/s)")),
+    );
+    reports.push(Bench::quick("fig6c_rate_sweep").run(|| exp::fig6::rate_sweep(scale)));
+    reports.push(Bench::quick("table1_metrics").run(|| exp::table1::run(scale)));
+    reports.push(Bench::quick("fig7_ablation").run(|| exp::fig7::run(scale)));
+    reports.push(Bench::quick("fig8_staleness").run(|| exp::fig8::run(scale)));
+    reports.push(Bench::quick("fig9_trace").run(|| exp::fig9::run(scale)));
+    reports.push(Bench::quick("fig10_scalability").run(|| exp::fig10::run(scale, true)));
 
+    if let Some(path) = args.get_path("json") {
+        bench::write_json(&path, &reports).expect("write bench json");
+        println!("\n{} bench reports written to {}", reports.len(), path.display());
+    }
     println!("\nall paper-experiment benches complete");
 }

@@ -16,7 +16,7 @@ use crate::gpu::CacheEventKind;
 use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
 use crate::obs::{SchedPhase, Trace, TraceEvent, Tracer};
 use crate::runtime::Runtime;
-use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, Scheduler};
+use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, PlanCell, Scheduler};
 use crate::sim::QTask;
 use crate::sst::{Sst, SstRow};
 use crate::util::rng::Rng;
@@ -135,6 +135,9 @@ struct WorkerNode {
     executed: u64,
     rng: Rng,
     rx: Receiver<Msg>,
+    /// Thread-local reusable planning scratch (each worker thread makes its
+    /// own scheduling decisions, so no sharing — mirrors the simulator's).
+    scratch: PlanCell,
 }
 
 impl WorkerNode {
@@ -191,6 +194,7 @@ impl WorkerNode {
                 rows: &rows,
                 cost: &sh.cfg.cost,
                 speed: &sh.speed,
+                scratch: &self.scratch,
             };
             let ctx = AssignCtx {
                 job: &js.job,
@@ -452,6 +456,7 @@ impl WorkerNode {
                 rows: &rows,
                 cost: &sh.cfg.cost,
                 speed: &sh.speed,
+                scratch: &self.scratch,
             };
             (dfg.entry, sh.scheduler.plan_probed(&js.job, dfg, &view, &mut probe))
         };
@@ -680,6 +685,7 @@ impl LiveCluster {
                     executed: 0,
                     rng: worker_rng,
                     rx,
+                    scratch: PlanCell::default(),
                 };
                 node.run(rtx)
             }));

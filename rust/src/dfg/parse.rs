@@ -173,7 +173,14 @@ edge depth -> fuse
         let cost = CostModel::default();
         let rows = vec![SstRow::default(); 5];
         let speed = vec![1.0; 5];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &sched::PlanCell::default(),
+        };
         let job = crate::dfg::Job {
             id: 1,
             kind: PipelineKind::Perception,

@@ -6,7 +6,7 @@
 //! reaches the floor with roughly *half* the workers and leaves the rest
 //! completely idle (the paper's headline resource-efficiency claim).
 
-use super::Scale;
+use super::{Runner, Scale};
 use crate::config::{ClusterConfig, SchedulerKind};
 use crate::util::table;
 use crate::workload;
@@ -39,27 +39,34 @@ impl ScalabilityResult {
 }
 
 pub fn compute(scale: Scale, quick: bool) -> ScalabilityResult {
+    compute_with(&Runner::from_env(), scale, quick)
+}
+
+/// Both schedulers' sweeps share one job stream (borrowed into each run)
+/// and flatten into a single work list: the big 250-worker cells and the
+/// cheap 5-worker ones self-balance on the stealing cursor.
+pub fn compute_with(runner: &Runner, scale: Scale, quick: bool) -> ScalabilityResult {
     let sizes: Vec<usize> =
         if quick { vec![10, 25, 50, 100] } else { vec![5, 10, 25, 50, 75, 100, 150, 200, 250] };
     let n_jobs = if quick { 800 } else { 2000 };
     let jobs = workload::poisson(40.0, n_jobs, &[], scale.seed ^ 0xf16);
 
-    let sweep = |kind: SchedulerKind| -> Vec<ScalePoint> {
-        sizes
-            .iter()
-            .map(|&w| {
-                let cfg =
-                    ClusterConfig::default().with_scheduler(kind).with_workers(w).with_seed(scale.seed);
-                let m = Simulator::simulate(cfg, jobs.clone()).metrics;
-                ScalePoint {
-                    workers: w,
-                    median_slowdown: m.median_slowdown(),
-                    active_workers: m.active_workers(),
-                }
-            })
-            .collect()
-    };
-    ScalabilityResult { compass: sweep(SchedulerKind::Compass), hash: sweep(SchedulerKind::Hash) }
+    let cells: Vec<(SchedulerKind, usize)> = [SchedulerKind::Compass, SchedulerKind::Hash]
+        .iter()
+        .flat_map(|&kind| sizes.iter().map(move |&w| (kind, w)))
+        .collect();
+    let points = runner.par_map(&cells, |_, &(kind, w)| {
+        let cfg =
+            ClusterConfig::default().with_scheduler(kind).with_workers(w).with_seed(scale.seed);
+        let m = Simulator::simulate_ref(&cfg, &jobs).metrics;
+        ScalePoint {
+            workers: w,
+            median_slowdown: m.median_slowdown(),
+            active_workers: m.active_workers(),
+        }
+    });
+    let n = sizes.len();
+    ScalabilityResult { compass: points[..n].to_vec(), hash: points[n..].to_vec() }
 }
 
 pub fn run(scale: Scale, quick: bool) -> ScalabilityResult {

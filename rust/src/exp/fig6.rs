@@ -8,7 +8,7 @@
 //! short pipelines (image caption, 3D perception) blow up the most for the
 //! losing schedulers.
 
-use super::{run_scenario, Scale};
+use super::{run_scenario, Runner, Scale};
 use crate::config::SchedulerKind;
 use crate::dfg::PipelineKind;
 use crate::util::stats::BoxStats;
@@ -48,21 +48,29 @@ impl BoxesResult {
     }
 }
 
-pub fn boxes(rate: f64, scale: Scale, title: &str) -> BoxesResult {
-    let mut per_sched = Vec::new();
-    for s in SchedulerKind::ALL {
+/// Fan the four scheduler runs across the runner's pool; results come back
+/// in `SchedulerKind::ALL` order, so the table below is byte-identical to
+/// the old serial loop.
+pub fn compute_boxes(runner: &Runner, rate: f64, scale: Scale) -> BoxesResult {
+    let per_sched = runner.par_map(&SchedulerKind::ALL, |_, &s| {
         let m = run_scenario(s, rate, scale, |_| {});
         let per_kind: Vec<(PipelineKind, BoxStats)> = PipelineKind::ALL
             .iter()
             .filter_map(|&k| m.box_stats(k).map(|b| (k, b)))
             .collect();
-        per_sched.push((s, per_kind));
-    }
+        (s, per_kind)
+    });
+    BoxesResult { rate, per_sched }
+}
+
+pub fn boxes(rate: f64, scale: Scale, title: &str) -> BoxesResult {
+    let result = compute_boxes(&Runner::from_env(), rate, scale);
+    let per_sched = &result.per_sched;
 
     println!("\n=== {title} ===");
     println!("slow_down_factor distribution per job category (box plot stats)\n");
     let mut rows = Vec::new();
-    for (s, per_kind) in &per_sched {
+    for (s, per_kind) in per_sched {
         for (k, b) in per_kind {
             rows.push(vec![
                 s.name().to_string(),
@@ -79,7 +87,7 @@ pub fn boxes(rate: f64, scale: Scale, title: &str) -> BoxesResult {
         "{}",
         table::render(&["scheduler", "pipeline", "q1", "median", "q3", "whisker-hi", "outliers"], &rows)
     );
-    BoxesResult { rate, per_sched }
+    result
 }
 
 /// Figure 6c — mean slow-down factor vs request rate, mixed workload.
@@ -96,17 +104,23 @@ impl RateSweepResult {
     }
 }
 
-pub fn rate_sweep(scale: Scale) -> RateSweepResult {
+/// All `scheduler × rate` cells are independent runs: flatten the grid so
+/// the work-stealing pool balances the expensive high-rate cells, then
+/// regroup per scheduler. Row/column order matches the serial nest.
+pub fn compute_rate_sweep(runner: &Runner, scale: Scale) -> RateSweepResult {
     let rates = vec![0.5, 1.0, 1.5, 2.0, 2.5, 3.0];
-    let mut means = Vec::new();
-    for s in SchedulerKind::ALL {
-        let mut row = Vec::new();
-        for &r in &rates {
-            let m = run_scenario(s, r, scale, |_| {});
-            row.push(m.mean_slowdown());
-        }
-        means.push(row);
-    }
+    let cells: Vec<(SchedulerKind, f64)> = SchedulerKind::ALL
+        .iter()
+        .flat_map(|&s| rates.iter().map(move |&r| (s, r)))
+        .collect();
+    let flat =
+        runner.par_map(&cells, |_, &(s, r)| run_scenario(s, r, scale, |_| {}).mean_slowdown());
+    let means: Vec<Vec<f64>> = flat.chunks(rates.len()).map(|c| c.to_vec()).collect();
+    RateSweepResult { rates, means }
+}
+
+pub fn rate_sweep(scale: Scale) -> RateSweepResult {
+    let RateSweepResult { rates, means } = compute_rate_sweep(&Runner::from_env(), scale);
 
     println!("\n=== Figure 6c — mean slow-down factor vs request rate ===\n");
     let mut rows = Vec::new();

@@ -6,7 +6,7 @@
 //! queue-lookahead eviction beats FIFO at high rate but is a wash at low
 //! rate.
 
-use super::{run_scenario, Scale};
+use super::{run_scenario, Runner, Scale};
 use crate::config::SchedulerKind;
 use crate::gpu::EvictionPolicy;
 use crate::util::table;
@@ -23,6 +23,13 @@ pub struct AblationRow {
 pub const RATES: [f64; 3] = [0.5, 1.5, 2.5];
 
 pub fn compute(scale: Scale) -> Vec<AblationRow> {
+    compute_with(&Runner::from_env(), scale)
+}
+
+/// Flatten `variant × rate` into independent cells for the pool, then
+/// regroup per variant. The reported hit rate is the last-rate cell's, the
+/// same cell the serial loop left in its accumulator.
+pub fn compute_with(runner: &Runner, scale: Scale) -> Vec<AblationRow> {
     type Mutator = fn(&mut crate::config::ClusterConfig);
     let variants: Vec<(&'static str, Mutator)> = vec![
         ("compass-full", |_| {}),
@@ -30,17 +37,21 @@ pub fn compute(scale: Scale) -> Vec<AblationRow> {
         ("fifo-eviction", |c| c.eviction = EvictionPolicy::Fifo),
         ("no-model-locality", |c| c.compass.model_locality = false),
     ];
+    let cells: Vec<(Mutator, f64)> = variants
+        .iter()
+        .flat_map(|&(_, mutate)| RATES.iter().map(move |&r| (mutate, r)))
+        .collect();
+    let flat = runner.par_map(&cells, |_, &(mutate, r)| {
+        let m = run_scenario(SchedulerKind::Compass, r, scale, mutate);
+        (m.mean_slowdown(), m.cache_hit_rate())
+    });
     variants
-        .into_iter()
-        .map(|(name, mutate)| {
-            let mut means = Vec::new();
-            let mut hit = 0.0;
-            for &r in &RATES {
-                let m = run_scenario(SchedulerKind::Compass, r, scale, mutate);
-                means.push(m.mean_slowdown());
-                hit = m.cache_hit_rate();
-            }
-            AblationRow { variant: name, means, hit_rate_pct: hit }
+        .iter()
+        .zip(flat.chunks(RATES.len()))
+        .map(|(&(name, _), chunk)| AblationRow {
+            variant: name,
+            means: chunk.iter().map(|&(slow, _)| slow).collect(),
+            hit_rate_pct: chunk.last().unwrap().1,
         })
         .collect()
 }

@@ -6,7 +6,7 @@
 //! (knee around 200 ms) than to *cache* staleness, because model fetches
 //! are much rarer events than queue changes.
 
-use super::{run_scenario, Scale};
+use super::{run_scenario, Runner, Scale};
 use crate::config::SchedulerKind;
 use crate::core::MS;
 
@@ -38,19 +38,25 @@ impl StalenessGrid {
 }
 
 pub fn compute(scale: Scale) -> StalenessGrid {
+    compute_with(&Runner::from_env(), scale)
+}
+
+/// The 4×4 staleness grid is 16 independent runs — flatten row-major for
+/// the pool, regroup into rows afterwards.
+pub fn compute_with(runner: &Runner, scale: Scale) -> StalenessGrid {
     let intervals_ms: Vec<u64> = vec![100, 200, 400, 1000];
-    let mut slowdown = Vec::new();
-    for &li in &intervals_ms {
-        let mut row = Vec::new();
-        for &ci in &intervals_ms {
-            let m = run_scenario(SchedulerKind::Compass, 2.5, scale, |c| {
-                c.push.load_interval_us = li * MS;
-                c.push.cache_interval_us = ci * MS;
-            });
-            row.push(m.mean_slowdown());
-        }
-        slowdown.push(row);
-    }
+    let cells: Vec<(u64, u64)> = intervals_ms
+        .iter()
+        .flat_map(|&li| intervals_ms.iter().map(move |&ci| (li, ci)))
+        .collect();
+    let flat = runner.par_map(&cells, |_, &(li, ci)| {
+        run_scenario(SchedulerKind::Compass, 2.5, scale, |c| {
+            c.push.load_interval_us = li * MS;
+            c.push.cache_interval_us = ci * MS;
+        })
+        .mean_slowdown()
+    });
+    let slowdown: Vec<Vec<f64>> = flat.chunks(intervals_ms.len()).map(|c| c.to_vec()).collect();
     StalenessGrid { intervals_ms, slowdown }
 }
 

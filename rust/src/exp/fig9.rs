@@ -7,7 +7,7 @@
 //! burst-tolerant; Compass keeps the best completion times through the
 //! bursts.
 
-use super::Scale;
+use super::{Runner, Scale};
 use crate::config::{ClusterConfig, SchedulerKind};
 use crate::util::stats::percentile;
 use crate::util::table;
@@ -29,24 +29,26 @@ pub struct TraceResult {
 }
 
 pub fn compute(scale: Scale) -> TraceResult {
+    compute_with(&Runner::from_env(), scale)
+}
+
+/// One trace replay per scheduler, all sharing the same synthesized job
+/// stream (borrowed, not cloned, into each run).
+pub fn compute_with(runner: &Runner, scale: Scale) -> TraceResult {
     let duration_s = (scale.jobs as f64 / 2.0).max(60.0);
     let (jobs, buckets) = workload::alibaba_like(2.0, duration_s, scale.seed ^ 0xa11b);
-    let rows = SchedulerKind::ALL
-        .iter()
-        .map(|&s| {
-            let cfg = ClusterConfig::default().with_scheduler(s).with_seed(scale.seed);
-            let m = Simulator::simulate(cfg, jobs.clone()).metrics;
-            let lats: Vec<f64> =
-                m.jobs.iter().map(|j| j.latency_us() as f64 / 1e6).collect();
-            TraceRow {
-                scheduler: s,
-                p50_s: percentile(&lats, 50.0),
-                p95_s: percentile(&lats, 95.0),
-                max_s: percentile(&lats, 100.0),
-                mean_slowdown: m.mean_slowdown(),
-            }
-        })
-        .collect();
+    let rows = runner.par_map(&SchedulerKind::ALL, |_, &s| {
+        let cfg = ClusterConfig::default().with_scheduler(s).with_seed(scale.seed);
+        let m = Simulator::simulate_ref(&cfg, &jobs).metrics;
+        let lats: Vec<f64> = m.jobs.iter().map(|j| j.latency_us() as f64 / 1e6).collect();
+        TraceRow {
+            scheduler: s,
+            p50_s: percentile(&lats, 50.0),
+            p95_s: percentile(&lats, 95.0),
+            max_s: percentile(&lats, 100.0),
+            mean_slowdown: m.mean_slowdown(),
+        }
+    });
     TraceResult { rows, bucket_rates: buckets.iter().map(|b| b.rate_per_s).collect() }
 }
 

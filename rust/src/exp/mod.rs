@@ -17,8 +17,11 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod runner;
 pub mod table1;
 pub mod validate;
+
+pub use runner::Runner;
 
 use crate::config::{ClusterConfig, SchedulerKind};
 use crate::metrics::MetricsSink;
@@ -78,6 +81,12 @@ pub fn run_scenario(
 /// CLI dispatch for `compass experiment <which>`.
 pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
     let scale = Scale::from_args(args);
+    // `--threads N` pins the experiment runner's parallelism (also settable
+    // via COMPASS_THREADS). Results are byte-identical at any thread count;
+    // this only trades wall-clock for cores.
+    if let Some(t) = args.get("threads") {
+        std::env::set_var(runner::THREADS_ENV, t);
+    }
     match which {
         "fig6a" => {
             fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)");

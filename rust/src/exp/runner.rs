@@ -1,0 +1,135 @@
+//! Parallel experiment engine: a std-only scoped-thread work-stealing
+//! pool that fans independent simulation runs across cores.
+//!
+//! Every figure of §6 is a sweep of mutually independent `(config, seed,
+//! workload)` simulator runs — each run is bit-reproducible from its own
+//! seed, so the only thing parallelism could perturb is *aggregation
+//! order*. [`Runner::par_map`] therefore writes each result into the slot
+//! of its input index and returns them in input order: the merged output
+//! is byte-identical to a serial loop, regardless of thread count or
+//! completion order (locked by `tests/determinism_parallel.rs`).
+//!
+//! Work-stealing is a single shared atomic cursor: threads claim the next
+//! unclaimed index as they finish, so uneven run lengths (a 250-worker
+//! Fig. 10 point vs. a 5-worker one) self-balance without any up-front
+//! partitioning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Environment variable overriding the pool width (`1` forces serial).
+pub const THREADS_ENV: &str = "COMPASS_THREADS";
+
+#[derive(Debug, Clone, Copy)]
+pub struct Runner {
+    threads: usize,
+}
+
+impl Runner {
+    /// A pool of exactly `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Runner {
+        Runner { threads: threads.max(1) }
+    }
+
+    /// The serial engine: `par_map` degenerates to an inline `map`.
+    pub fn serial() -> Runner {
+        Runner::new(1)
+    }
+
+    /// Pool width from the environment: `COMPASS_THREADS` if set to a
+    /// positive integer, else all available cores, else serial.
+    pub fn from_env() -> Runner {
+        let from_var = std::env::var(THREADS_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&t| t >= 1);
+        let threads = from_var
+            .or_else(|| std::thread::available_parallelism().ok().map(|n| n.get()))
+            .unwrap_or(1);
+        Runner::new(threads)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item, possibly in parallel, returning results in
+    /// input order. `f` gets `(index, &item)`; it must depend only on its
+    /// arguments (each experiment run re-seeds from its own config), which
+    /// is what makes the output independent of scheduling.
+    ///
+    /// A panic inside `f` propagates to the caller when the thread scope
+    /// joins, matching the serial path's fail-fast behavior.
+    pub fn par_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &T) -> U + Sync,
+    {
+        if self.threads == 1 || items.len() <= 1 {
+            return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        // Shared claim cursor (the "steal" point) + indexed write-back
+        // slots so completion order never reorders results.
+        let cursor = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<U>>> =
+            Mutex::new((0..items.len()).map(|_| None).collect());
+        let n_threads = self.threads.min(items.len());
+        std::thread::scope(|s| {
+            for _ in 0..n_threads {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = f(i, &items[i]);
+                    results.lock().unwrap()[i] = Some(out);
+                });
+            }
+        });
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every index claimed exactly once"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let serial = Runner::serial().par_map(&items, |i, &x| (i, x * 3));
+        let parallel = Runner::new(4).par_map(&items, |i, &x| (i, x * 3));
+        assert_eq!(serial, parallel);
+        assert_eq!(parallel[17], (17, 51));
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(Runner::new(8).par_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(Runner::new(8).par_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn threads_clamp_to_one() {
+        assert_eq!(Runner::new(0).threads(), 1);
+        assert!(Runner::from_env().threads() >= 1);
+    }
+
+    #[test]
+    fn uneven_work_still_lands_in_slots() {
+        // Items late in the list finish first; slots must not shuffle.
+        let items: Vec<u64> = (0..32).rev().collect();
+        let got = Runner::new(8).par_map(&items, |_, &x| {
+            std::thread::sleep(std::time::Duration::from_micros(x * 10));
+            x
+        });
+        assert_eq!(got, items);
+    }
+}

@@ -6,7 +6,7 @@
 //! energy, but Compass's latency is lowest by a wide margin and its cache
 //! hit rate is the highest (paper: 99% vs 91–95%).
 
-use super::{run_scenario, Scale};
+use super::{run_scenario, Runner, Scale};
 use crate::config::SchedulerKind;
 use crate::util::table;
 
@@ -21,20 +21,21 @@ pub struct Table1Row {
 }
 
 pub fn compute(scale: Scale) -> Vec<Table1Row> {
-    SchedulerKind::ALL
-        .iter()
-        .map(|&s| {
-            let m = run_scenario(s, 2.0, scale, |_| {});
-            Table1Row {
-                scheduler: s,
-                latency_s: m.mean_latency_s(),
-                gpu_util_pct: m.gpu_utilization(),
-                mem_util_pct: m.gpu_memory_utilization(),
-                energy_j: m.gpu_energy_joules(),
-                hit_rate_pct: m.cache_hit_rate(),
-            }
-        })
-        .collect()
+    compute_with(&Runner::from_env(), scale)
+}
+
+pub fn compute_with(runner: &Runner, scale: Scale) -> Vec<Table1Row> {
+    runner.par_map(&SchedulerKind::ALL, |_, &s| {
+        let m = run_scenario(s, 2.0, scale, |_| {});
+        Table1Row {
+            scheduler: s,
+            latency_s: m.mean_latency_s(),
+            gpu_util_pct: m.gpu_utilization(),
+            mem_util_pct: m.gpu_memory_utilization(),
+            energy_j: m.gpu_energy_joules(),
+            hit_rate_pct: m.cache_hit_rate(),
+        }
+    })
 }
 
 pub fn run(scale: Scale) -> Vec<Table1Row> {

@@ -18,7 +18,7 @@ fn usage() -> ! {
          \x20             --workers W --seed S\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|all>\n\
-         \x20             [--quick] [--seed S]\n\
+         \x20             [--quick] [--seed S] [--threads N]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 serve       --rate R --jobs N [--workers W] [--artifacts DIR]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\

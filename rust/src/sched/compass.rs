@@ -7,7 +7,7 @@
 //! task whose planned worker's queue wait exceeds `R(t,w) × threshold`.
 //! Both ablation switches of §6.3.1 are honored via `CompassConfig`.
 
-use super::{arrival_at, AssignCtx, ClusterView, DecisionProbe, Scheduler};
+use super::{arrival_at, AssignCtx, ClusterView, DecisionProbe, PlanScratch, Scheduler};
 use crate::config::{CompassConfig, SchedulerKind};
 use crate::core::{Micros, TaskId, WorkerId};
 use crate::dfg::models::{mean_model_bytes, model_bytes};
@@ -73,9 +73,15 @@ impl Scheduler for Compass {
     ) -> Adfg {
         let n = dfg.len();
         let w_count = view.n_workers();
-        // Line 2: worker_FT_map from the Global State Monitor.
-        let mut worker_ft: Vec<Micros> = (0..w_count).map(|w| view.ft(w)).collect();
-        let mut task_ft: Vec<Micros> = vec![0; n];
+        // Line 2: worker_FT_map from the Global State Monitor — filled into
+        // the caller-owned scratch, so planning allocates nothing per job
+        // beyond the returned ADFG (which outlives this call as job state).
+        let mut scratch = view.scratch.borrow_mut();
+        let PlanScratch { worker_ft, task_ft } = &mut *scratch;
+        worker_ft.clear();
+        worker_ft.extend((0..w_count).map(|w| view.ft(w)));
+        task_ft.clear();
+        task_ft.resize(n, 0);
         let mut adfg = Adfg::unassigned(n);
 
         // Lines 4-12: descending rank order (precomputed statically, §4.2.1).
@@ -152,15 +158,16 @@ impl Scheduler for Compass {
             probe.offer(planned, view.wait(planned));
             return planned;
         }
-        // Lines 6-12: rank workers by earliest finish for this task.
-        let avail: Vec<Micros> = vec![view.now; ctx.pred_outputs.len()];
+        // Lines 6-12: rank workers by earliest finish for this task. All
+        // inputs already exist (t just became dispatchable), so they are
+        // available `now` at their holders.
         let mut best = planned;
         let mut best_ft = Micros::MAX;
         for w in 0..view.n_workers() {
             // Lines 8-11: queue wait + model fetch + runtime, plus the input
             // transfer when moving off this scheduler's worker (arrival_at
             // charges only non-colocated inputs, a refinement of line 11).
-            let arrive = arrival_at(view, ctx.pred_outputs, &avail, w);
+            let arrive = arrival_at(view, ctx.pred_outputs, view.now, w);
             let start = view.ft(w).max(arrive);
             let ft = start
                 + self.td_model_est(ctx.dfg, ctx.task, w, view)
@@ -185,12 +192,15 @@ mod tests {
     use crate::net::CostModel;
     use crate::sst::SstRow;
 
+    use crate::sched::PlanCell;
+
     fn view_with<'a>(
         rows: &'a [SstRow],
         cost: &'a CostModel,
         speed: &'a [f64],
+        scratch: &'a PlanCell,
     ) -> ClusterView<'a> {
-        ClusterView { now: 0, self_worker: 0, rows, cost, speed }
+        ClusterView { now: 0, self_worker: 0, rows, cost, speed, scratch }
     }
 
     fn job(kind: crate::dfg::PipelineKind) -> Job {
@@ -204,7 +214,7 @@ mod tests {
         let rows = vec![SstRow::default(); 5];
         let speed = vec![1.0; 5];
         let c = Compass::new(CompassConfig::default());
-        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed, &PlanCell::default()));
         assert!(adfg.assignment.iter().all(|a| a.is_some()));
     }
 
@@ -219,7 +229,7 @@ mod tests {
         rows[2].cache_bitmap = 1 << OPT; // only worker 2 has OPT resident
         let speed = vec![1.0; 3];
         let c = Compass::new(CompassConfig::default());
-        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed, &PlanCell::default()));
         assert_eq!(adfg.get(0), Some(2), "should chase the cached OPT");
     }
 
@@ -234,7 +244,7 @@ mod tests {
         rows[2].cache_bitmap = 1 << OPT;
         let speed = vec![1.0; 3];
         let c = Compass::new(CompassConfig { model_locality: false, ..Default::default() });
-        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed, &PlanCell::default()));
         // Without locality the estimate is uniform; ingress colocation wins.
         assert_eq!(adfg.get(0), Some(0));
     }
@@ -250,7 +260,7 @@ mod tests {
         }
         let speed = vec![1.0; 2];
         let c = Compass::new(CompassConfig::default());
-        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed, &PlanCell::default()));
         assert!(adfg.assignment.iter().all(|&a| a == Some(1)));
     }
 
@@ -263,7 +273,7 @@ mod tests {
         rows[1].free_cache_bytes = 16 * GB;
         let speed = vec![1.0; 2];
         let c = Compass::new(CompassConfig::default());
-        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed));
+        let adfg = c.plan(&job(dfg.kind), &dfg, &view_with(&rows, &cost, &speed, &PlanCell::default()));
         assert_eq!(adfg.get(0), Some(1));
     }
 
@@ -273,7 +283,8 @@ mod tests {
         let dfg = pipelines::vpa(&cost);
         let rows = vec![SstRow::default(); 3];
         let speed = vec![1.0; 3];
-        let view = view_with(&rows, &cost, &speed);
+        let scratch = PlanCell::default();
+        let view = view_with(&rows, &cost, &speed, &scratch);
         let c = Compass::new(CompassConfig::default());
         let j = job(dfg.kind);
         let outs = [(0usize, 100u64)];
@@ -291,7 +302,14 @@ mod tests {
             r.free_cache_bytes = 16 * GB;
         }
         let speed = vec![1.0; 3];
-        let view = ClusterView { now: 10 * MS, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 10 * MS,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
         let c = Compass::new(CompassConfig::default());
         let j = job(dfg.kind);
         let outs = [(0usize, 100u64)];
@@ -307,7 +325,8 @@ mod tests {
         let mut rows = vec![SstRow::default(); 3];
         rows[2].ft_us = 120 * SEC;
         let speed = vec![1.0; 3];
-        let view = view_with(&rows, &cost, &speed);
+        let scratch = PlanCell::default();
+        let view = view_with(&rows, &cost, &speed, &scratch);
         let c = Compass::new(CompassConfig::default());
         let j = job(dfg.kind);
         let outs = [(0usize, 100u64), (1usize, 100u64)];
@@ -323,7 +342,8 @@ mod tests {
         let mut rows = vec![SstRow::default(); 3];
         rows[1].ft_us = 120 * SEC;
         let speed = vec![1.0; 3];
-        let view = view_with(&rows, &cost, &speed);
+        let scratch = PlanCell::default();
+        let view = view_with(&rows, &cost, &speed, &scratch);
         let c = Compass::new(CompassConfig { dynamic_adjust: false, ..Default::default() });
         let j = job(dfg.kind);
         let outs = [(0usize, 100u64)];

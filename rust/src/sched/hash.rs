@@ -58,7 +58,14 @@ mod tests {
         let dfg = crate::dfg::pipelines::translation(&cost);
         let rows = vec![SstRow::default(); 4];
         let speed = vec![1.0; 4];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let mut counts = [0usize; 4];
         for id in 0..4000u64 {
             let job = Job { id, kind: dfg.kind, arrival_us: 0, input_bytes: 10 };
@@ -83,7 +90,14 @@ mod tests {
         let dfg = crate::dfg::pipelines::vpa(&cost);
         let rows = vec![SstRow::default(); 3];
         let speed = vec![1.0; 3];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 42, kind: dfg.kind, arrival_us: 0, input_bytes: 10 };
         let a = HashSched.plan(&job, &dfg, &view);
         let b = HashSched.plan(&job, &dfg, &view);

@@ -7,7 +7,7 @@
 //! locked at planning time). Within one job instance it still tracks its
 //! own processor-availability map, as classic HEFT does.
 
-use super::{AssignCtx, ClusterView, DecisionProbe, Scheduler};
+use super::{AssignCtx, ClusterView, DecisionProbe, PlanScratch, Scheduler};
 use crate::config::SchedulerKind;
 use crate::core::{Micros, WorkerId};
 use crate::dfg::{Adfg, Dfg, Job};
@@ -29,9 +29,15 @@ impl Scheduler for Heft {
         let n = dfg.len();
         let w_count = view.n_workers();
         // Per-job processor availability; starts at `now` everywhere —
-        // the cluster-wide backlog is invisible to classic HEFT.
-        let mut avail: Vec<Micros> = vec![view.now; w_count];
-        let mut task_ft: Vec<Micros> = vec![0; n];
+        // the cluster-wide backlog is invisible to classic HEFT. The
+        // caller-owned scratch's worker_ft doubles as the availability map,
+        // so planning allocates nothing per job beyond the returned ADFG.
+        let mut scratch = view.scratch.borrow_mut();
+        let PlanScratch { worker_ft: avail, task_ft } = &mut *scratch;
+        avail.clear();
+        avail.resize(w_count, view.now);
+        task_ft.clear();
+        task_ft.resize(n, 0);
         let mut adfg = Adfg::unassigned(n);
 
         for &t in dfg.rank_order() {
@@ -95,7 +101,14 @@ mod tests {
         let mut rows = vec![SstRow::default(); 2];
         rows[0].ft_us = 600 * SEC;
         let speed = vec![1.0; 2];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 1000 };
         let adfg = Heft.plan(&job, &dfg, &view);
         // Chain pipeline colocates on the ingress worker: exactly the
@@ -109,7 +122,14 @@ mod tests {
         let dfg = pipelines::translation(&cost);
         let rows = vec![SstRow::default(); 4];
         let speed = vec![1.0; 4];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 1000 };
         let adfg = Heft.plan(&job, &dfg, &view);
         // The three translation branches (tasks 1..3) must not all share one
@@ -125,7 +145,14 @@ mod tests {
         let dfg = pipelines::vpa(&cost);
         let rows = vec![SstRow::default(); 2];
         let speed = vec![1.0; 2];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 1000 };
         let outs = [(0usize, 10u64)];
         let ctx = AssignCtx { job: &job, dfg: &dfg, task: 1, planned: Some(1), pred_outputs: &outs };

@@ -37,11 +37,12 @@ impl Scheduler for Jit {
         view: &ClusterView,
         probe: &mut DecisionProbe,
     ) -> WorkerId {
-        let avail: Vec<Micros> = vec![view.now; ctx.pred_outputs.len()];
         let mut best = view.self_worker;
         let mut best_start = Micros::MAX;
         for w in 0..view.n_workers() {
-            let arrive = arrival_at(view, ctx.pred_outputs, &avail, w);
+            // Inputs all exist (the task just became dispatchable), so they
+            // are available `now` at their holders — no per-call vector.
+            let arrive = arrival_at(view, ctx.pred_outputs, view.now, w);
             let td_model = match ctx.dfg.vertices[ctx.task].model {
                 Some(m) if view.rows[w].cache_bitmap & (1u64 << m) == 0 => {
                     view.cost.td_model(model_bytes(m))
@@ -83,7 +84,14 @@ mod tests {
         let dfg = pipelines::vpa(&cost);
         let rows = vec![SstRow::default(); 2];
         let speed = vec![1.0; 2];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
         let adfg = Jit.plan(&job, &dfg, &view);
         assert!(adfg.assignment.iter().all(|a| a.is_none()));
@@ -98,7 +106,14 @@ mod tests {
         rows[1].free_cache_bytes = 10 * GB;
         rows[0].free_cache_bytes = 16 * GB;
         let speed = vec![1.0; 2];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
         let outs = [(0usize, 100u64)];
         let w = Jit.assign(&ctx_for(&job, &dfg, 0, &outs), &view);
@@ -112,7 +127,14 @@ mod tests {
         let mut rows = vec![SstRow::default(); 2];
         rows[0].ft_us = 30 * SEC;
         let speed = vec![1.0; 2];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &rows, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &rows,
+            cost: &cost,
+            speed: &speed,
+            scratch: &crate::sched::PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
         let outs = [(0usize, 100u64)];
         // Glue task (no model) — pure queue comparison.

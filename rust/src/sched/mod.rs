@@ -22,6 +22,26 @@ use crate::net::CostModel;
 use crate::obs::CandidateSet;
 use crate::sst::SstRow;
 
+/// Reusable scratch for the planning hot paths (Algorithms 1/2): the
+/// per-worker finish-time map and per-task finish times that `plan` needs
+/// per job. Hoisted out of the schedulers so a steady-state decision does
+/// zero heap allocation — buffers are cleared and refilled, never freed.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    /// worker_FT_map (Alg. 1 line 2); HEFT reuses it as its availability
+    /// map.
+    pub worker_ft: Vec<Micros>,
+    /// FT(t) of already-placed tasks (Alg. 1 line 10).
+    pub task_ft: Vec<Micros>,
+}
+
+/// Interior-mutability cell carrying [`PlanScratch`] through the shared
+/// `&ClusterView`, keeping `plan`/`assign` `&self`. Each deciding thread
+/// owns its own cell (`RefCell` is `Send` but not `Sync`: the simulator
+/// and every live worker thread hold one apiece), so the stateless
+/// `Scheduler: Send + Sync` contract is untouched.
+pub type PlanCell = std::cell::RefCell<PlanScratch>;
+
 /// What a scheduling decision can see: the *published* SST rows (with the
 /// deciding worker's own row refreshed live — a worker always knows its own
 /// state), plus static cluster facts.
@@ -34,6 +54,8 @@ pub struct ClusterView<'a> {
     pub cost: &'a CostModel,
     /// Per-worker speed factor; R(t,w) = R(t) * speed[w].
     pub speed: &'a [f64],
+    /// Caller-owned reusable planning scratch (one per deciding thread).
+    pub scratch: &'a PlanCell,
 }
 
 impl<'a> ClusterView<'a> {
@@ -192,18 +214,19 @@ pub fn build(cfg: &ClusterConfig) -> Box<dyn Scheduler> {
 }
 
 /// Shared estimate: earliest arrival of all of t's inputs at worker w,
-/// given where each input currently (or will) live. `avail[i]` is the
-/// absolute time input i becomes available at its holder.
+/// given where each input currently lives. `avail_us` is the absolute time
+/// the inputs become available at their holders — on the adjust path every
+/// input already exists (t just became dispatchable), so a single scalar
+/// replaces the per-input vector the callers used to allocate.
 pub fn arrival_at(
     view: &ClusterView,
     inputs: &[(WorkerId, u64)],
-    avail: &[Micros],
+    avail_us: Micros,
     w: WorkerId,
 ) -> Micros {
     inputs
         .iter()
-        .zip(avail)
-        .map(|(&(src, bytes), &t0)| t0 + view.cost.td_input(bytes, src, w))
+        .map(|&(src, bytes)| avail_us + view.cost.td_input(bytes, src, w))
         .max()
         .unwrap_or(view.now)
 }
@@ -225,8 +248,14 @@ mod tests {
         let speed = vec![1.0; 2];
         let mut r = rows(2);
         r[0].ft_us = 100;
-        let view =
-            ClusterView { now: 5 * SEC, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 5 * SEC,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
         assert_eq!(view.ft(0), 5 * SEC);
         assert_eq!(view.wait(0), 0);
     }
@@ -237,7 +266,14 @@ mod tests {
         let dfg = pipelines::vpa(&cost);
         let speed = vec![1.0, 2.0];
         let r = rows(2);
-        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
         assert_eq!(view.r(&dfg, 0, 1), 2 * view.r(&dfg, 0, 0));
     }
 
@@ -246,13 +282,21 @@ mod tests {
         let cost = CostModel::default();
         let speed = vec![1.0; 3];
         let r = rows(3);
-        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
-        // The big, late input lives on worker 1; the small one on worker 2.
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
+        // The big input lives on worker 1; the small one on worker 2. Both
+        // become available at t = 20 ms.
         let inputs = [(1usize, 8_000_000u64), (2usize, 1_000_000u64)];
-        let avail = [20 * MS, 10 * MS];
+        let avail = 20 * MS;
         // At worker 1 the dominant input is free (colocated).
-        let a1 = arrival_at(&view, &inputs, &avail, 1);
-        let a2 = arrival_at(&view, &inputs, &avail, 0);
+        let a1 = arrival_at(&view, &inputs, avail, 1);
+        let a2 = arrival_at(&view, &inputs, avail, 0);
         assert!(a1 < a2, "a1={a1} a2={a2}");
         assert!(a1 >= 20 * MS);
     }
@@ -299,7 +343,14 @@ mod tests {
         let dfg = pipelines::vpa(&cost);
         let r = rows(3);
         let speed = vec![1.0; 3];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
         let job = Job { id: 1, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
         for kind in SchedulerKind::ALL {
             let cfg = ClusterConfig::default().with_scheduler(kind);
@@ -333,7 +384,14 @@ mod tests {
         let dfg = crate::dfg::pipelines::translation(&cost);
         let r = rows(4);
         let speed = vec![1.0; 4];
-        let view = ClusterView { now: 0, self_worker: 0, rows: &r, cost: &cost, speed: &speed };
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
         let job = Job { id: 9, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
         let cfg = ClusterConfig::default();
         let sched = build(&cfg);

@@ -10,8 +10,10 @@
 //! 5 workers; `compass validate` repeats that comparison against our live
 //! coordinator (see `exp::validate`).
 
+mod queue;
 mod worker;
 
+pub use queue::EventQueue;
 pub use worker::{QTask, SimWorker};
 
 use crate::config::ClusterConfig;
@@ -22,18 +24,17 @@ use crate::gpu::CacheEventKind;
 use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
 use crate::obs::{SchedPhase, Trace, TraceEvent, Tracer};
 use crate::profiles::ProfileRepository;
-use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, Scheduler};
+use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, PlanCell, Scheduler};
 use crate::sst::{Sst, SstRow};
 use crate::util::rng::Rng;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 /// Salt for the client's ingress-worker choice.
 const INGRESS_SALT: u64 = 0x1693_55aa;
 
-/// Simulation events. Heap ordering is (time, seq): simultaneous events
-/// process deterministically in creation order.
-#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+/// Simulation events. Queue ordering is (time, seq): simultaneous events
+/// process deterministically in creation order — the ordering lives in
+/// [`EventQueue`]'s index heap, so the payload needs no `Ord`.
+#[derive(Debug, Clone, Copy)]
 enum Event {
     JobArrival { job_idx: usize },
     /// ADFG message lands at `w`: task joins its execution queue.
@@ -49,38 +50,47 @@ enum Event {
     PushCache { w: WorkerId },
 }
 
-/// Per-job bookkeeping during simulation.
+/// Per-job bookkeeping during simulation. Every vector is pre-sized from
+/// the DFG at construction, and the layout is flat: the per-edge `sent`
+/// flags live in one vector indexed through `Simulator::succ_off` (edge
+/// `p → succs[p][slot]` is bit `succ_off[p] + slot`) instead of a
+/// vec-of-vecs, so a job costs 5 allocations instead of 6 + one per task.
 struct JobState {
     job: Job,
     adfg: Adfg,
     /// Arrived-input counters per task (entry counts the client input).
     inputs_arrived: Vec<usize>,
     remaining_preds: Vec<usize>,
-    done: Vec<bool>,
-    /// Worker holding each task's output once done.
+    /// Worker holding each task's output once done. A task is done exactly
+    /// when its output has a holder (see [`JobState::done`]).
     output_worker: Vec<Option<WorkerId>>,
-    /// Per-edge output-sent flags, indexed parallel to dfg.succs[t].
-    sent: Vec<Vec<bool>>,
+    /// Flat per-edge output-sent flags; see `Simulator::succ_off`.
+    sent: Vec<bool>,
     completed: bool,
 }
 
 impl JobState {
     fn new(job: Job, dfg: &Dfg) -> JobState {
         let n = dfg.len();
+        let edges: usize = dfg.succs.iter().map(|s| s.len()).sum();
         JobState {
             job,
             adfg: Adfg::unassigned(n),
             inputs_arrived: vec![0; n],
             remaining_preds: (0..n).map(|t| dfg.preds[t].len()).collect(),
-            done: vec![false; n],
             output_worker: vec![None; n],
-            sent: (0..n).map(|t| vec![false; dfg.succs[t].len()]).collect(),
+            sent: vec![false; edges],
             completed: false,
         }
     }
 
     fn needed_inputs(&self, dfg: &Dfg, t: TaskId) -> usize {
         dfg.preds[t].len().max(1) // entry waits for the client input
+    }
+
+    #[inline]
+    fn done(&self, t: TaskId) -> bool {
+        self.output_worker[t].is_some()
     }
 }
 
@@ -101,8 +111,7 @@ pub struct Simulator {
     workers: Vec<SimWorker>,
     sst: Sst,
     jobs: Vec<JobState>,
-    heap: BinaryHeap<Reverse<(Micros, u64, Event)>>,
-    seq: u64,
+    queue: EventQueue<Event>,
     now: Micros,
     completed_jobs: usize,
     records: Vec<JobRecord>,
@@ -115,6 +124,20 @@ pub struct Simulator {
     profiles: Option<ProfileRepository>,
     events_processed: u64,
     tracer: Tracer,
+    /// Per-kind edge offsets into `JobState::sent`: edge `p → succs[p][slot]`
+    /// of kind `k` is flag `succ_off[k][p] + slot`. The succs *topology*
+    /// never changes (profiles only refine runtimes), so this is computed
+    /// once.
+    succ_off: Vec<Vec<usize>>,
+    /// Reusable planning scratch shared with the scheduler through
+    /// `ClusterView` — plan/assign allocate nothing per job.
+    plan_scratch: PlanCell,
+    /// Hot-path scratch, reused across all events of a run (taken with
+    /// `mem::take`, refilled, and restored; never freed).
+    pred_buf: Vec<(WorkerId, u64)>,
+    preds_buf: Vec<TaskId>,
+    succs_buf: Vec<TaskId>,
+    lookahead_buf: Vec<ModelId>,
 }
 
 impl Simulator {
@@ -133,14 +156,25 @@ impl Simulator {
             .collect();
         let profiles = (cfg.profile_alpha > 0.0)
             .then(|| ProfileRepository::from_dfgs(&dfgs, cfg.profile_alpha));
+        let succ_off: Vec<Vec<usize>> = dfgs
+            .iter()
+            .map(|d| {
+                let mut off = Vec::with_capacity(d.len());
+                let mut acc = 0usize;
+                for t in 0..d.len() {
+                    off.push(acc);
+                    acc += d.succs[t].len();
+                }
+                off
+            })
+            .collect();
         Simulator {
             sst: Sst::new(cfg.n_workers),
             dfgs,
             scheduler,
             workers,
             jobs: Vec::new(),
-            heap: BinaryHeap::new(),
-            seq: 0,
+            queue: EventQueue::new(),
             now: 0,
             completed_jobs: 0,
             records: Vec::new(),
@@ -150,13 +184,18 @@ impl Simulator {
             profiles,
             events_processed: 0,
             tracer: Tracer::from_config(cfg.trace),
+            succ_off,
+            plan_scratch: PlanCell::default(),
+            pred_buf: Vec::new(),
+            preds_buf: Vec::new(),
+            succs_buf: Vec::new(),
+            lookahead_buf: Vec::new(),
             cfg,
         }
     }
 
     fn push_event(&mut self, at: Micros, ev: Event) {
-        self.seq += 1;
-        self.heap.push(Reverse((at, self.seq, ev)));
+        self.queue.push(at, ev);
     }
 
     /// Published rows with the deciding worker's own row refreshed live
@@ -186,27 +225,34 @@ impl Simulator {
         self.view_rows(on_worker);
         let mut probe =
             if self.tracer.on() { DecisionProbe::on() } else { DecisionProbe::off() };
-        // Gather immutable facts before mutating.
-        let (pred_outputs, target) = {
-            let rows = &self.rows_scratch;
+        // Input locations go into a buffer reused across all dispatches —
+        // taken out of `self` so the scheduler call can borrow the rest.
+        let mut pred_outputs = std::mem::take(&mut self.pred_buf);
+        pred_outputs.clear();
+        {
             let js = &self.jobs[job_idx];
             let dfg = &self.dfgs[js.job.kind.index()];
-            let pred_outputs: Vec<(WorkerId, u64)> = if dfg.preds[task].is_empty() {
-                vec![(on_worker, js.job.input_bytes)]
+            if dfg.preds[task].is_empty() {
+                pred_outputs.push((on_worker, js.job.input_bytes));
             } else {
-                dfg.preds[task]
-                    .iter()
-                    .map(|&p| {
-                        (js.output_worker[p].expect("pred done"), dfg.vertices[p].output_bytes)
-                    })
-                    .collect()
-            };
+                for &p in &dfg.preds[task] {
+                    pred_outputs.push((
+                        js.output_worker[p].expect("pred done"),
+                        dfg.vertices[p].output_bytes,
+                    ));
+                }
+            }
+        }
+        let target = {
+            let js = &self.jobs[job_idx];
+            let dfg = &self.dfgs[js.job.kind.index()];
             let view = ClusterView {
                 now: self.now,
                 self_worker: on_worker,
-                rows,
+                rows: &self.rows_scratch,
                 cost: &self.cfg.cost,
                 speed: &self.speed,
+                scratch: &self.plan_scratch,
             };
             let ctx = AssignCtx {
                 job: &js.job,
@@ -215,7 +261,7 @@ impl Simulator {
                 planned: js.adfg.get(task),
                 pred_outputs: &pred_outputs,
             };
-            (pred_outputs.clone(), self.scheduler.assign_probed(&ctx, &view, &mut probe))
+            self.scheduler.assign_probed(&ctx, &view, &mut probe)
         };
 
         if probe.is_active() {
@@ -239,24 +285,29 @@ impl Simulator {
 
         // Ship every not-yet-sent input to the target.
         let dfg_idx = self.jobs[job_idx].job.kind.index();
-        let preds = self.dfgs[dfg_idx].preds[task].clone();
-        if preds.is_empty() {
+        if self.dfgs[dfg_idx].preds[task].is_empty() {
             let td = self.cfg.cost.td_input(pred_outputs[0].1, on_worker, target);
             self.push_event(self.now + td, Event::InputArrive { job_idx, task });
         } else {
+            let mut preds = std::mem::take(&mut self.preds_buf);
+            preds.clear();
+            preds.extend_from_slice(&self.dfgs[dfg_idx].preds[task]);
             for &p in &preds {
                 let slot =
                     self.dfgs[dfg_idx].succs[p].iter().position(|&s| s == task).unwrap();
-                if self.jobs[job_idx].sent[p][slot] {
+                let edge = self.succ_off[dfg_idx][p] + slot;
+                if self.jobs[job_idx].sent[edge] {
                     continue;
                 }
-                self.jobs[job_idx].sent[p][slot] = true;
+                self.jobs[job_idx].sent[edge] = true;
                 let src = self.jobs[job_idx].output_worker[p].unwrap();
                 let bytes = self.dfgs[dfg_idx].vertices[p].output_bytes;
                 let td = self.cfg.cost.td_input(bytes, src, target);
                 self.push_event(self.now + td, Event::InputArrive { job_idx, task });
             }
+            self.preds_buf = preds;
         }
+        self.pred_buf = pred_outputs;
     }
 
     fn handle_job_arrival(&mut self, job_idx: usize) {
@@ -293,6 +344,7 @@ impl Simulator {
                 rows: &self.rows_scratch,
                 cost: &self.cfg.cost,
                 speed: &self.speed,
+                scratch: &self.plan_scratch,
             };
             // Planning phase: the initial ADFG (§4.2).
             self.scheduler.plan_probed(&js.job, dfg, &view, &mut probe)
@@ -338,15 +390,9 @@ impl Simulator {
             repo.observe(kind, task, observed);
             self.dfgs[dfg_idx].vertices[task].mean_runtime_us = repo.runtime(kind, task);
         }
-        let (exit, succs) = {
-            let d = &self.dfgs[dfg_idx];
-            (d.exit, d.succs[task].clone())
-        };
-        {
-            let js = &mut self.jobs[job_idx];
-            js.done[task] = true;
-            js.output_worker[task] = Some(w);
-        }
+        let exit = self.dfgs[dfg_idx].exit;
+        // Marks the task done: done(t) ⇔ output_worker[t].is_some().
+        self.jobs[job_idx].output_worker[task] = Some(w);
 
         if task == exit {
             self.jobs[job_idx].completed = true;
@@ -368,6 +414,11 @@ impl Simulator {
             }
         }
 
+        // Successor list into a reused buffer (assign_and_dispatch below
+        // re-borrows self, so we can't hold a borrow of the DFG here).
+        let mut succs = std::mem::take(&mut self.succs_buf);
+        succs.clear();
+        succs.extend_from_slice(&self.dfgs[dfg_idx].succs[task]);
         for (slot, &s) in succs.iter().enumerate() {
             self.jobs[job_idx].remaining_preds[s] -= 1;
             if self.jobs[job_idx].remaining_preds[s] == 0 {
@@ -378,8 +429,9 @@ impl Simulator {
                 // early (the planning-phase benefit, §3.2). Join placements
                 // are never dynamically adjusted, so this is safe.
                 if let Some(target) = self.jobs[job_idx].adfg.get(s) {
-                    if !self.jobs[job_idx].sent[task][slot] {
-                        self.jobs[job_idx].sent[task][slot] = true;
+                    let edge = self.succ_off[dfg_idx][task] + slot;
+                    if !self.jobs[job_idx].sent[edge] {
+                        self.jobs[job_idx].sent[edge] = true;
                         let bytes = self.dfgs[dfg_idx].vertices[task].output_bytes;
                         let td = self.cfg.cost.td_input(bytes, w, target);
                         self.push_event(self.now + td, Event::InputArrive { job_idx, task: s });
@@ -387,6 +439,7 @@ impl Simulator {
                 }
             }
         }
+        self.succs_buf = succs;
 
         self.try_dispatch(w);
     }
@@ -400,6 +453,12 @@ impl Simulator {
         let now = self.now;
         let mut fetch: Option<(usize, ModelId)> = None;
         let mut start: Option<(usize, usize, TaskId, Micros, bool, Option<ModelId>)> = None;
+        // Queue-lookahead buffer, reused across all scans of a run. Filled
+        // lazily — most dispatch scans trigger no fetch — and read again by
+        // the fetch execution below: the queue doesn't change in between,
+        // so one fill serves both the decision and its execution.
+        let mut lookahead = std::mem::take(&mut self.lookahead_buf);
+        lookahead.clear();
         {
             let jobs = &self.jobs;
             let dfgs = &self.dfgs;
@@ -407,13 +466,11 @@ impl Simulator {
             let can_fetch = worker.fetching().is_none();
             let can_start = worker.running().is_none();
             let queue = worker.queue();
-            // Built lazily: most dispatch scans trigger no fetch, and this
-            // allocation dominated the event loop before being deferred.
-            let mut lookahead_models: Option<Vec<ModelId>> = None;
+            let mut la_filled = false;
             for (i, qt) in queue.iter().enumerate() {
                 let js = &jobs[qt.job_idx];
                 let dfg = &dfgs[js.job.kind.index()];
-                if js.done[qt.task] {
+                if js.done(qt.task) {
                     continue;
                 }
                 if js.inputs_arrived[qt.task] < js.needed_inputs(dfg, qt.task) {
@@ -424,10 +481,11 @@ impl Simulator {
                         if can_fetch && fetch.is_none() {
                             // Eviction decision sees the models queued from
                             // here onward (§5.3.2 queue-lookahead).
-                            let la = lookahead_models.get_or_insert_with(|| {
-                                queue.iter().filter_map(|q| q.model).collect()
-                            });
-                            if worker.gpu.plan_eviction(model_bytes(m), la).is_some() {
+                            if !la_filled {
+                                la_filled = true;
+                                worker.queue_models_into(&mut lookahead);
+                            }
+                            if worker.gpu.plan_eviction(model_bytes(m), &lookahead).is_some() {
                                 fetch = Some((i, m));
                             }
                         }
@@ -448,9 +506,8 @@ impl Simulator {
         }
 
         if let Some((i, m)) = fetch {
-            // Re-plan eviction with mutable access and execute it.
-            let lookahead: Vec<ModelId> =
-                self.workers[w].queue().iter().filter_map(|q| q.model).collect();
+            // Re-plan eviction with mutable access and execute it; the
+            // lookahead buffer is still the one the decision saw.
             let victims = self.workers[w]
                 .gpu
                 .plan_eviction(model_bytes(m), &lookahead)
@@ -467,15 +524,15 @@ impl Simulator {
             let td = self.cfg.cost.td_model(model_bytes(m));
             self.push_event(now + td, Event::FetchDone { w, model: m });
         }
+        self.lookahead_buf = lookahead;
 
-        if let Some((mut i, job_idx, task, end, caused_fetch, model)) = start {
+        if let Some((i, job_idx, task, end, caused_fetch, model)) = start {
             if let (Some(m), false) = (model, caused_fetch) {
                 self.workers[w].gpu.record_hit(m, now);
             }
             // The fetch marking above didn't reorder the queue, so index i
             // is still valid (eviction doesn't touch the queue).
             debug_assert_eq!(self.workers[w].queue()[i].task, task);
-            let _ = &mut i;
             self.workers[w].start_task(i, now, end);
             if self.tracer.on() {
                 self.tracer.record(TraceEvent::ExecStart {
@@ -524,15 +581,17 @@ impl Simulator {
         self.try_dispatch(w);
     }
 
-    /// Run the full workload to completion; returns metrics.
-    pub fn run(&mut self, jobs: Vec<Job>) -> SimReport {
+    /// Run the full workload to completion; returns metrics. Takes the
+    /// jobs by reference so sweeps (and benches) can share one workload
+    /// across many runs without cloning it per run.
+    pub fn run(&mut self, jobs: &[Job]) -> SimReport {
+        self.jobs.reserve(jobs.len());
+        self.queue.reserve(jobs.len() + 2 * self.cfg.n_workers);
         for job in jobs {
-            let kind = job.kind;
-            let arrival = job.arrival_us;
-            let js = JobState::new(job, &self.dfgs[kind.index()]);
+            let js = JobState::new(job.clone(), &self.dfgs[job.kind.index()]);
             let idx = self.jobs.len();
             self.jobs.push(js);
-            self.push_event(arrival, Event::JobArrival { job_idx: idx });
+            self.push_event(job.arrival_us, Event::JobArrival { job_idx: idx });
         }
         for w in 0..self.cfg.n_workers {
             self.push_event(0, Event::PushLoad { w });
@@ -540,7 +599,7 @@ impl Simulator {
         }
 
         const MAX_EVENTS: u64 = 500_000_000;
-        while let Some(Reverse((at, _, ev))) = self.heap.pop() {
+        while let Some((at, ev)) = self.queue.pop() {
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
             self.events_processed += 1;
@@ -635,7 +694,14 @@ impl Simulator {
 
     /// Convenience: build, run, report.
     pub fn simulate(cfg: ClusterConfig, jobs: Vec<Job>) -> SimReport {
-        Simulator::new(cfg).run(jobs)
+        Simulator::new(cfg).run(&jobs)
+    }
+
+    /// Borrowing variant of [`Simulator::simulate`]: sweeps and benches
+    /// run one shared workload against many configs without per-run
+    /// clones (the config clone is setup, not measured work).
+    pub fn simulate_ref(cfg: &ClusterConfig, jobs: &[Job]) -> SimReport {
+        Simulator::new(cfg.clone()).run(jobs)
     }
 }
 
@@ -679,6 +745,19 @@ mod tests {
         let jobs = workload::poisson(2.0, 60, &[], 5);
         let a = Simulator::simulate(ClusterConfig::default(), jobs.clone());
         let b = Simulator::simulate(ClusterConfig::default(), jobs);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.sim_span_us, b.sim_span_us);
+        let la: Vec<_> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<_> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn simulate_ref_matches_owned() {
+        let jobs = workload::poisson(2.0, 40, &[], 5);
+        let cfg = ClusterConfig::default();
+        let a = Simulator::simulate(cfg.clone(), jobs.clone());
+        let b = Simulator::simulate_ref(&cfg, &jobs);
         assert_eq!(a.events_processed, b.events_processed);
         assert_eq!(a.sim_span_us, b.sim_span_us);
         let la: Vec<_> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();

@@ -56,6 +56,13 @@ impl SimWorker {
         &self.queue
     }
 
+    /// Append every queued task's model to `out` — the eviction planner's
+    /// queue-lookahead window (§5.3.2) — into a caller-reused buffer, so a
+    /// dispatch scan allocates nothing in steady state.
+    pub fn queue_models_into(&self, out: &mut Vec<ModelId>) {
+        out.extend(self.queue.iter().filter_map(|q| q.model));
+    }
+
     pub fn running(&self) -> Option<&QTask> {
         self.running.as_ref()
     }

@@ -21,6 +21,9 @@ pub struct BenchReport {
     pub median_ns: f64,
     pub p95_ns: f64,
     pub min_ns: f64,
+    /// Derived throughput for benches with a natural event count
+    /// (simulator runs); `None` for pure-latency micro benches.
+    pub events_per_sec: Option<f64>,
 }
 
 impl Bench {
@@ -70,6 +73,7 @@ impl Bench {
             median_ns: samples_ns[n / 2],
             p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
             min_ns: samples_ns[0],
+            events_per_sec: None,
         };
         println!("{}", report.render());
         report
@@ -87,6 +91,62 @@ impl BenchReport {
             fmt_ns(self.p95_ns),
         )
     }
+
+    /// Derive throughput from the events one iteration processes.
+    pub fn with_events(mut self, events_per_iter: u64) -> BenchReport {
+        if self.median_ns > 0.0 {
+            self.events_per_sec = Some(events_per_iter as f64 * 1e9 / self.median_ns);
+        }
+        self
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        m.insert("p95_ns".to_string(), Json::Num(self.p95_ns));
+        m.insert("min_ns".to_string(), Json::Num(self.min_ns));
+        m.insert(
+            "events_per_sec".to_string(),
+            self.events_per_sec.map(Json::Num).unwrap_or(Json::Null),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Write bench reports to a JSON array file (`cargo bench -- --json
+/// BENCH_sim.json`). Merges by bench name with any existing file so the
+/// separate bench binaries accumulate into one artifact.
+pub fn write_json(path: &std::path::Path, reports: &[BenchReport]) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let mut entries: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    for r in reports {
+        let j = r.to_json();
+        let slot = entries
+            .iter_mut()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some(r.name.as_str()));
+        match slot {
+            Some(e) => *e = j,
+            None => entries.push(j),
+        }
+    }
+    let mut out = String::from("[\n");
+    for (i, e) in entries.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str("  ");
+        out.push_str(&e.to_string());
+    }
+    out.push_str("\n]\n");
+    std::fs::write(path, out)
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -118,5 +178,54 @@ mod tests {
         assert!(fmt_ns(10_000.0).ends_with("µs"));
         assert!(fmt_ns(10_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2_000_000_000.0).ends_with(" s"));
+    }
+
+    fn report(name: &str, median_ns: f64) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            iters: 10,
+            mean_ns: median_ns,
+            median_ns,
+            p95_ns: median_ns,
+            min_ns: median_ns,
+            events_per_sec: None,
+        }
+    }
+
+    #[test]
+    fn with_events_derives_throughput() {
+        let r = report("sim", 2_000_000.0).with_events(10_000);
+        // 10k events / 2 ms = 5M events/s.
+        assert_eq!(r.events_per_sec, Some(5_000_000.0));
+    }
+
+    #[test]
+    fn json_has_required_fields() {
+        let j = report("x", 1234.0).with_events(100).to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("median_ns").unwrap().as_f64(), Some(1234.0));
+        assert!(j.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_merges_by_name() {
+        let path = std::env::temp_dir().join(format!("bench_merge_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        write_json(&path, &[report("a", 1.0), report("b", 2.0)]).unwrap();
+        // Second write updates "b" and adds "c".
+        write_json(&path, &[report("b", 20.0), report("c", 3.0)]).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        let by_name = |n: &str| {
+            arr.iter()
+                .find(|e| e.get("name").and_then(|x| x.as_str()) == Some(n))
+                .and_then(|e| e.get("median_ns").unwrap().as_f64())
+                .unwrap()
+        };
+        assert_eq!(by_name("a"), 1.0);
+        assert_eq!(by_name("b"), 20.0);
+        assert_eq!(by_name("c"), 3.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -67,6 +67,41 @@ impl Json {
     }
 }
 
+/// Serializer: compact JSON, object keys in `BTreeMap` order (stable
+/// output for artifacts diffed across runs). Non-finite numbers have no
+/// JSON spelling and are written as `null`.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(x) if x.is_finite() => write!(f, "{x}"),
+            Json::Num(_) => f.write_str("null"),
+            Json::Str(s) => write!(f, "\"{}\"", escape(s)),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "\"{}\":{v}", escape(k))?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
@@ -318,5 +353,18 @@ mod tests {
         let s = "line\n\"quoted\"\\tab\t";
         let parsed = Json::parse(&format!("\"{}\"", escape(s))).unwrap();
         assert_eq!(parsed, Json::Str(s.into()));
+    }
+
+    #[test]
+    fn display_roundtrips_through_parser() {
+        let j = Json::parse(r#"{"a": [1, 2.5, {"b": "x\ny"}], "c": false, "d": null}"#).unwrap();
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn display_maps_nonfinite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(42.0).to_string(), "42");
     }
 }

@@ -1,0 +1,69 @@
+//! Parallel experiment engine determinism: every figure computed on a
+//! multi-thread `Runner` must be *byte-identical* (f64 bit patterns, not
+//! approximate equality) to the serial engine. This is the contract that
+//! lets `--threads N` be a pure wall-clock knob — the paper tables never
+//! change with core count.
+
+use compass::exp::{fig10, fig6, fig8, Runner, Scale};
+
+fn scale() -> Scale {
+    // Small enough for debug-mode CI, large enough that every scheduler
+    // actually queues work at the high rates.
+    Scale { jobs: 60, seed: 42 }
+}
+
+fn bits(rows: &[Vec<f64>]) -> Vec<Vec<u64>> {
+    rows.iter().map(|r| r.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+#[test]
+fn fig6c_rate_sweep_parallel_matches_serial() {
+    let serial = fig6::compute_rate_sweep(&Runner::new(1), scale());
+    let parallel = fig6::compute_rate_sweep(&Runner::new(4), scale());
+    assert_eq!(serial.rates, parallel.rates);
+    assert_eq!(bits(&serial.means), bits(&parallel.means));
+}
+
+#[test]
+fn fig8_staleness_grid_parallel_matches_serial() {
+    let serial = fig8::compute_with(&Runner::new(1), scale());
+    let parallel = fig8::compute_with(&Runner::new(4), scale());
+    assert_eq!(serial.intervals_ms, parallel.intervals_ms);
+    assert_eq!(bits(&serial.slowdown), bits(&parallel.slowdown));
+}
+
+#[test]
+fn fig10_scalability_parallel_matches_serial() {
+    let serial = fig10::compute_with(&Runner::new(1), scale(), true);
+    let parallel = fig10::compute_with(&Runner::new(4), scale(), true);
+    for (s, p) in serial.compass.iter().zip(&parallel.compass) {
+        assert_eq!(s.workers, p.workers);
+        assert_eq!(s.active_workers, p.active_workers);
+        assert_eq!(s.median_slowdown.to_bits(), p.median_slowdown.to_bits());
+    }
+    for (s, p) in serial.hash.iter().zip(&parallel.hash) {
+        assert_eq!(s.workers, p.workers);
+        assert_eq!(s.active_workers, p.active_workers);
+        assert_eq!(s.median_slowdown.to_bits(), p.median_slowdown.to_bits());
+    }
+    assert_eq!(serial.compass.len(), parallel.compass.len());
+    assert_eq!(serial.hash.len(), parallel.hash.len());
+}
+
+#[test]
+fn thread_count_beyond_item_count_is_harmless() {
+    // More threads than cells: excess threads find the cursor exhausted.
+    let serial = fig6::compute_boxes(&Runner::new(1), 0.5, scale());
+    let wide = fig6::compute_boxes(&Runner::new(32), 0.5, scale());
+    assert_eq!(serial.per_sched.len(), wide.per_sched.len());
+    for ((s_kind, s_rows), (p_kind, p_rows)) in serial.per_sched.iter().zip(&wide.per_sched) {
+        assert_eq!(s_kind, p_kind);
+        assert_eq!(s_rows.len(), p_rows.len());
+        for ((sk, sb), (pk, pb)) in s_rows.iter().zip(p_rows) {
+            assert_eq!(sk, pk);
+            assert_eq!(sb.median.to_bits(), pb.median.to_bits());
+            assert_eq!(sb.q1.to_bits(), pb.q1.to_bits());
+            assert_eq!(sb.q3.to_bits(), pb.q3.to_bits());
+        }
+    }
+}

@@ -54,6 +54,7 @@ fn prop_plan_routes_every_task_to_valid_worker() {
             rows: &rows,
             cost: &cost,
             speed: &speed,
+            scratch: &sched::PlanCell::default(),
         };
         let adfg = sched.plan(&job, &dfg, &view);
         if adfg.assignment.len() != dfg.len() {
@@ -90,6 +91,7 @@ fn prop_planning_is_deterministic_given_view() {
             rows: &rows,
             cost: &cost,
             speed: &speed,
+            scratch: &sched::PlanCell::default(),
         };
         let a = sched.plan(&job, &dfg, &view);
         let b = sched.plan(&job, &dfg, &view);
