@@ -133,6 +133,28 @@ fn main() {
         reports.push(b);
     }
 
+    // --- Execute-path batching on a same-model-heavy workload: the same
+    // VPA-only stream unbatched vs coalesced (batch_max 8), so the pair of
+    // events-per-sec numbers tracks the batching win over time.
+    {
+        let jobs = workload::poisson(4.0, 300, &[0.0, 0.0, 1.0, 0.0], 11);
+        for &(batch_max, label) in
+            &[(1usize, "sim_vpa_300_jobs_batch_off"), (8usize, "sim_vpa_300_jobs_batch_max8")]
+        {
+            let cfg = ClusterConfig::default().with_batching(batch_max, 1_000);
+            let events = Simulator::simulate_ref(&cfg, &jobs).events_processed;
+            let b = Bench::new(label)
+                .run(|| Simulator::simulate_ref(&cfg, &jobs))
+                .with_events(events);
+            println!(
+                "  -> ~{:.2} M events/s ({} events per run)",
+                b.events_per_sec.unwrap_or(0.0) / 1e6,
+                events
+            );
+            reports.push(b);
+        }
+    }
+
     // --- GPU cache eviction planning (queue-lookahead).
     {
         use compass::gpu::{EvictionPolicy, GpuCache};

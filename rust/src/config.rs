@@ -147,6 +147,12 @@ impl ClusterConfig {
         self
     }
 
+    pub fn with_batching(mut self, batch_max: usize, window_us: Micros) -> Self {
+        self.cost.batch.batch_max = batch_max.max(1);
+        self.cost.batch.window_us = window_us;
+        self
+    }
+
     pub fn speed(&self, w: usize) -> f64 {
         self.worker_speed.get(w).copied().unwrap_or(1.0)
     }
@@ -193,6 +199,9 @@ impl ClusterConfig {
                 }
                 "load_push_interval_ms" => cfg.push.load_interval_us = v.parse::<u64>()? * MS,
                 "cache_push_interval_ms" => cfg.push.cache_interval_us = v.parse::<u64>()? * MS,
+                "batch_max" => cfg.cost.batch.batch_max = v.parse()?,
+                "batch_window_us" => cfg.cost.batch.window_us = v.parse()?,
+                "batch_alpha" => cfg.cost.batch.alpha_override = Some(v.parse()?),
                 "runtime_jitter" => cfg.runtime_jitter = v.parse()?,
                 "runtime_bias" => cfg.runtime_bias = v.parse()?,
                 "profile_alpha" => cfg.profile_alpha = v.parse()?,
@@ -256,6 +265,20 @@ mod tests {
         let err = ClusterConfig::from_kv_file(&path).unwrap_err();
         std::fs::remove_file(&path).ok();
         assert!(err.to_string().contains("unknown key"));
+    }
+
+    #[test]
+    fn kv_file_batching_keys() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("compass_batchcfg_{}.toml", std::process::id()));
+        std::fs::write(&path, "batch_max = 8\nbatch_window_us = 500\nbatch_alpha = 0.4\n")
+            .unwrap();
+        let c = ClusterConfig::from_kv_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(c.cost.batch.batch_max, 8);
+        assert_eq!(c.cost.batch.window_us, 500);
+        assert_eq!(c.cost.batch.alpha_override, Some(0.4));
+        assert!(c.cost.batch.enabled());
     }
 
     #[test]

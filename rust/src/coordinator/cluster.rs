@@ -54,6 +54,11 @@ enum Msg {
     FetchDone { model: ModelId },
     /// Self-scheduled execution completion.
     ExecDone { job_idx: usize, task: TaskId },
+    /// Self-scheduled batching-window expiry: start the held batch even if
+    /// it never filled. Stale once `hold_until` moved past `deadline`.
+    BatchWindow { deadline: Micros },
+    /// Self-scheduled completion of a coalesced batch.
+    BatchDone,
     Stop,
 }
 
@@ -127,9 +132,13 @@ struct WorkerNode {
     runtime: Option<Runtime>,
     queue: Vec<QTask>,
     gpu: crate::gpu::GpuCache,
-    running: Option<QTask>,
+    /// Currently executing task(s): one entry normally, several when a
+    /// same-model batch was coalesced (mirrors `sim::SimWorker::running`).
+    running: Vec<QTask>,
     /// Profiled-time end of the running task (for FT estimates).
     exec_end: Micros,
+    /// Batching-window deadline while this worker holds a partial batch.
+    hold_until: Option<Micros>,
     fetching: Option<ModelId>,
     busy_us: Micros,
     executed: u64,
@@ -142,8 +151,36 @@ struct WorkerNode {
 
 impl WorkerNode {
     fn live_row(&self, now: Micros) -> SstRow {
-        let remaining: Micros = self.queue.iter().map(|q| q.runtime_us).sum();
-        let base = if self.running.is_some() { self.exec_end.max(now) } else { now };
+        let batch = &self.shared.cfg.cost.batch;
+        let remaining: Micros = if batch.enabled() {
+            // Batching-aware drain: same-model queue entries coalesce, so
+            // the queue clears faster than the serial sum (mirrors
+            // `sim::SimWorker::ft_estimate`).
+            use crate::dfg::models::{batch_alpha, N_MODELS};
+            let mut count = [0u32; N_MODELS];
+            let mut sum = [0u64; N_MODELS];
+            let mut unmodeled = 0u64;
+            for q in &self.queue {
+                match q.model {
+                    Some(m) => {
+                        count[m as usize] += 1;
+                        sum[m as usize] += q.runtime_us;
+                    }
+                    None => unmodeled += q.runtime_us,
+                }
+            }
+            let mut drain = unmodeled;
+            for m in 0..N_MODELS {
+                if count[m] > 0 {
+                    let alpha = batch.alpha(batch_alpha(m as ModelId));
+                    drain += batch.drain_estimate_us(count[m] as usize, sum[m], alpha);
+                }
+            }
+            drain
+        } else {
+            self.queue.iter().map(|q| q.runtime_us).sum()
+        };
+        let base = if !self.running.is_empty() { self.exec_end.max(now) } else { now };
         SstRow {
             ft_us: base + remaining,
             cache_bitmap: self.gpu.bitmap(),
@@ -258,15 +295,53 @@ impl WorkerNode {
         }
     }
 
+    /// Run one coalesced forward pass for a `b`-member batch: a single
+    /// stacked PJRT call when the artifact is batch-capable, a per-member
+    /// fallback loop otherwise (see `CompiledModel::execute_batch`).
+    fn pjrt_execute_batch(&self, m: ModelId, b: usize) {
+        if let Some(rt) = &self.runtime {
+            if let Some(cm) = rt.get(model(m).artifact) {
+                let t0 = Instant::now();
+                let inputs = vec![cm.smoke_input(); b];
+                if let Ok(ys) = cm.execute_batch(&inputs) {
+                    std::hint::black_box(ys.len());
+                }
+                self.shared.pjrt_execs.fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .pjrt_exec_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+
     /// The dispatcher scan — mirrors `sim::Simulator::try_dispatch`.
     fn try_dispatch(&mut self) {
+        self.dispatch(false);
+    }
+
+    /// `force_start` (batching-window expiry) starts a held partial batch
+    /// instead of re-arming the hold.
+    fn dispatch(&mut self, force_start: bool) {
         let sh = self.shared.clone();
         let now = sh.now();
         let jobs = sh.jobs.lock().unwrap();
 
         // Fetch scan (PCIe serial; overlaps execution).
         if self.fetching.is_none() {
-            let lookahead: Vec<ModelId> = self.queue.iter().filter_map(|q| q.model).collect();
+            // Deduped in first-appearance order: the eviction planner only
+            // needs each upcoming model once.
+            let mut seen = 0u64;
+            let lookahead: Vec<ModelId> = self
+                .queue
+                .iter()
+                .filter_map(|q| q.model)
+                .filter(|&m| {
+                    let bit = 1u64 << m;
+                    let fresh = seen & bit == 0;
+                    seen |= bit;
+                    fresh
+                })
+                .collect();
             let mut fetch: Option<(usize, ModelId)> = None;
             for (i, qt) in self.queue.iter().enumerate() {
                 let js = &jobs[qt.job_idx];
@@ -301,8 +376,10 @@ impl WorkerNode {
             }
         }
 
-        // Start scan (GPU executes one task at a time).
-        if self.running.is_none() {
+        // Start scan (GPU executes one task — or one coalesced batch — at
+        // a time).
+        if self.running.is_empty() {
+            let batch = sh.cfg.cost.batch;
             let mut start: Option<usize> = None;
             for (i, qt) in self.queue.iter().enumerate() {
                 let js = &jobs[qt.job_idx];
@@ -319,6 +396,41 @@ impl WorkerNode {
                     }
                 }
             }
+            if let (Some(i), Some(m), true) =
+                (start, start.and_then(|i| self.queue[i].model), batch.enabled())
+            {
+                // Coalesce consecutive same-model ready queue-mates behind
+                // the leader, up to batch_max.
+                let mut members = vec![i];
+                for (j, qt) in self.queue.iter().enumerate().skip(i + 1) {
+                    if members.len() >= batch.batch_max {
+                        break;
+                    }
+                    if qt.model != Some(m) {
+                        break;
+                    }
+                    let js = &jobs[qt.job_idx];
+                    let dfg = &sh.dfgs[js.job.kind.index()];
+                    if js.inputs_arrived[qt.task] < dfg.preds[qt.task].len().max(1) {
+                        break;
+                    }
+                    members.push(j);
+                }
+                let full = members.len() >= batch.batch_max;
+                if !full && batch.window_us > 0 && !force_start {
+                    // Hold the GPU briefly for queue-mates to show up; the
+                    // window self-message fires a forced dispatch.
+                    if self.hold_until.is_none() {
+                        let deadline = now + batch.window_us;
+                        self.hold_until = Some(deadline);
+                        sh.send(self.id, batch.window_us, Msg::BatchWindow { deadline });
+                    }
+                    return;
+                }
+                drop(jobs);
+                self.start_batch(&members, m);
+                return;
+            }
             drop(jobs);
             if let Some(i) = start {
                 let qt = self.queue.remove(i);
@@ -332,11 +444,12 @@ impl WorkerNode {
                 }
                 self.busy_us += qt.runtime_us;
                 self.executed += 1;
+                self.hold_until = None;
                 let delay = qt.runtime_us;
                 let (job_idx, task) = (qt.job_idx, qt.task);
                 let exec_start = sh.now();
                 self.exec_end = exec_start + delay;
-                self.running = Some(qt);
+                self.running.push(qt);
                 if sh.cfg.trace.enabled {
                     let job = sh.jobs.lock().unwrap()[job_idx].job.id;
                     sh.trace(TraceEvent::ExecStart {
@@ -351,15 +464,93 @@ impl WorkerNode {
         }
     }
 
-    fn handle_exec_done(&mut self, job_idx: usize, task: TaskId) {
+    /// Pull `members` (ascending queue indices) out of the queue and run
+    /// them as one coalesced batch of model `m`.
+    fn start_batch(&mut self, members: &[usize], m: ModelId) {
         let sh = self.shared.clone();
-        let qt = self.running.take().expect("exec done without running");
+        let batch = sh.cfg.cost.batch;
+        for &j in members.iter().rev() {
+            let qt = self.queue.remove(j);
+            self.running.push(qt);
+        }
+        self.running.reverse();
+        let now = sh.now();
+        let (mut max_us, mut sum_us) = (0u64, 0u64);
+        for qt in &self.running {
+            max_us = max_us.max(qt.runtime_us);
+            sum_us += qt.runtime_us;
+            if !qt.caused_fetch {
+                self.gpu.record_hit(m, now);
+            }
+            self.gpu.pin(m);
+        }
+        // One real forward pass covers the whole batch.
+        self.pjrt_execute_batch(m, self.running.len());
+        let alpha = batch.alpha(crate::dfg::models::batch_alpha(m));
+        let delay = batch.batch_runtime_us(max_us, sum_us, alpha);
+        self.busy_us += delay;
+        self.executed += self.running.len() as u64;
+        self.hold_until = None;
+        let exec_start = sh.now();
+        self.exec_end = exec_start + delay;
+        sh.trace(TraceEvent::BatchFormed {
+            worker: self.id as u16,
+            model: m,
+            size: self.running.len() as u16,
+            t: exec_start,
+        });
+        if sh.cfg.trace.enabled {
+            let jobs = sh.jobs.lock().unwrap();
+            for qt in &self.running {
+                sh.trace(TraceEvent::ExecStart {
+                    job: jobs[qt.job_idx].job.id,
+                    task: qt.task as u16,
+                    worker: self.id as u16,
+                    t: exec_start,
+                });
+            }
+        }
+        sh.send(self.id, delay, Msg::BatchDone);
+    }
+
+    fn handle_exec_done(&mut self, job_idx: usize, task: TaskId) {
+        let qt = self.running.pop().expect("exec done without running");
+        debug_assert!(self.running.is_empty(), "solo exec done with batch-mates running");
         debug_assert_eq!((qt.job_idx, qt.task), (job_idx, task));
         if let Some(m) = qt.model {
             self.gpu.unpin(m);
         }
-        let now = sh.now();
+        let now = self.shared.now();
+        self.retire_task(job_idx, task, now);
+        self.try_dispatch();
+    }
 
+    /// A coalesced batch finished: every member completes at the same
+    /// instant (mirrors `sim::Simulator::handle_batch_done`).
+    fn handle_batch_done(&mut self) {
+        let sh = self.shared.clone();
+        let now = sh.now();
+        let model = self.running.first().and_then(|q| q.model).expect("batch without model");
+        sh.trace(TraceEvent::BatchExecuted {
+            worker: self.id as u16,
+            model,
+            size: self.running.len() as u16,
+            t: now,
+        });
+        let done = std::mem::take(&mut self.running);
+        for _ in &done {
+            self.gpu.unpin(model);
+        }
+        for qt in done {
+            self.retire_task(qt.job_idx, qt.task, now);
+        }
+        self.try_dispatch();
+    }
+
+    /// Post-execution bookkeeping for one finished task: trace, output
+    /// registration, job completion, and the successor walk.
+    fn retire_task(&mut self, job_idx: usize, task: TaskId, now: Micros) {
+        let sh = self.shared.clone();
         let (exit, succs, dfg_idx, job_id) = {
             let jobs = sh.jobs.lock().unwrap();
             let js = &jobs[job_idx];
@@ -419,7 +610,6 @@ impl WorkerNode {
                 }
             }
         }
-        self.try_dispatch();
     }
 
     fn handle_job(&mut self, job_idx: usize) {
@@ -545,6 +735,14 @@ impl WorkerNode {
                     self.try_dispatch();
                 }
                 Ok(Msg::ExecDone { job_idx, task }) => self.handle_exec_done(job_idx, task),
+                Ok(Msg::BatchWindow { deadline }) => {
+                    // Stale once the hold was satisfied or re-armed.
+                    if self.hold_until == Some(deadline) {
+                        self.hold_until = None;
+                        self.dispatch(true);
+                    }
+                }
+                Ok(Msg::BatchDone) => self.handle_batch_done(),
                 Ok(Msg::Stop) => break,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
@@ -678,8 +876,9 @@ impl LiveCluster {
                     shared: sh,
                     runtime: None,
                     queue: Vec::new(),
-                    running: None,
+                    running: Vec::new(),
                     exec_end: 0,
+                    hold_until: None,
                     fetching: None,
                     busy_us: 0,
                     executed: 0,
@@ -801,6 +1000,22 @@ mod tests {
         assert!(rep.trace.count(|e| matches!(e, TraceEvent::Decision { .. })) > 0);
         assert!(!rep.trace.task_spans().is_empty());
         assert!(rep.trace.count(|e| matches!(e, TraceEvent::SstStaleness { .. })) > 0);
+    }
+
+    #[test]
+    fn live_cluster_batches_same_model_load() {
+        let mut cfg = ClusterConfig::default().with_seed(11).with_batching(4, 2_000);
+        cfg.trace.enabled = true;
+        let live = LiveConfig { time_scale: 400.0, wall_timeout: Duration::from_secs(60) };
+        // All-VPA mix: every job funnels through the same two models, so
+        // same-model queue-mates are common.
+        let jobs = workload::poisson(4.0, 16, &[0.0, 0.0, 1.0, 0.0], 33);
+        let rep = LiveCluster::run(cfg, live, None, jobs).unwrap();
+        assert_eq!(rep.metrics.jobs.len(), 16);
+        let formed = rep.trace.count(|e| matches!(e, TraceEvent::BatchFormed { .. }));
+        let executed = rep.trace.count(|e| matches!(e, TraceEvent::BatchExecuted { .. }));
+        assert!(formed > 0, "batching under same-model load must form batches");
+        assert_eq!(formed, executed, "every formed batch retires exactly once");
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub fn cli_serve(args: &Args) -> anyhow::Result<()> {
         .with_seed(args.get_u64("seed", 42));
     // Either output needs the tracer running.
     cfg.trace.enabled |= trace_out.is_some() || metrics_out.is_some();
+    cfg.cost.batch.batch_max = args.get_usize("batch-max", 1).max(1);
+    cfg.cost.batch.window_us = args.get_u64("batch-window-us", cfg.cost.batch.window_us);
+    if let Some(a) = args.get("batch-alpha") {
+        cfg.cost.batch.alpha_override = Some(a.parse()?);
+    }
     let rate = args.get_f64("rate", 2.0);
     let n_jobs = args.get_usize("jobs", 40);
     let seed = cfg.seed ^ 0x9e37;

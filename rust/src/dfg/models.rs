@@ -9,7 +9,7 @@
 
 use crate::core::{ModelId, GB};
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ModelInfo {
     pub id: ModelId,
     pub name: &'static str,
@@ -17,18 +17,25 @@ pub struct ModelInfo {
     pub mem_bytes: u64,
     /// AOT artifact base name under artifacts/ (`<artifact>.hlo.txt`).
     pub artifact: &'static str,
+    /// Batch cost-curve exponent: a batch of b instances runs in
+    /// `R · (batch_alpha + (1 - batch_alpha) · b)`. Lower = more
+    /// batch-friendly (encoder-style models amortize better than
+    /// autoregressive decoders).
+    pub batch_alpha: f64,
 }
 
+pub const N_MODELS: usize = 8;
+
 /// ids must match python/compile/model.py MODEL_SPECS.
-pub const MODELS: [ModelInfo; 8] = [
-    ModelInfo { id: 0, name: "opt-1.3b", mem_bytes: 6 * GB, artifact: "opt" },
-    ModelInfo { id: 1, name: "marian", mem_bytes: 3 * GB, artifact: "marian" },
-    ModelInfo { id: 2, name: "mt5", mem_bytes: 5 * GB, artifact: "mt5" },
-    ModelInfo { id: 3, name: "vit-gpt2", mem_bytes: 4 * GB, artifact: "vit_gpt2" },
-    ModelInfo { id: 4, name: "espnet", mem_bytes: 3 * GB, artifact: "espnet" },
-    ModelInfo { id: 5, name: "bart", mem_bytes: 5 * GB, artifact: "bart" },
-    ModelInfo { id: 6, name: "detr", mem_bytes: 4 * GB, artifact: "detr" },
-    ModelInfo { id: 7, name: "glpn-depth", mem_bytes: 5 * GB, artifact: "glpn" },
+pub const MODELS: [ModelInfo; N_MODELS] = [
+    ModelInfo { id: 0, name: "opt-1.3b", mem_bytes: 6 * GB, artifact: "opt", batch_alpha: 0.70 },
+    ModelInfo { id: 1, name: "marian", mem_bytes: 3 * GB, artifact: "marian", batch_alpha: 0.60 },
+    ModelInfo { id: 2, name: "mt5", mem_bytes: 5 * GB, artifact: "mt5", batch_alpha: 0.65 },
+    ModelInfo { id: 3, name: "vit-gpt2", mem_bytes: 4 * GB, artifact: "vit_gpt2", batch_alpha: 0.55 },
+    ModelInfo { id: 4, name: "espnet", mem_bytes: 3 * GB, artifact: "espnet", batch_alpha: 0.60 },
+    ModelInfo { id: 5, name: "bart", mem_bytes: 5 * GB, artifact: "bart", batch_alpha: 0.65 },
+    ModelInfo { id: 6, name: "detr", mem_bytes: 4 * GB, artifact: "detr", batch_alpha: 0.50 },
+    ModelInfo { id: 7, name: "glpn-depth", mem_bytes: 5 * GB, artifact: "glpn", batch_alpha: 0.50 },
 ];
 
 pub const OPT: ModelId = 0;
@@ -55,6 +62,12 @@ pub fn mean_model_bytes() -> u64 {
     MODELS.iter().map(|m| m.mem_bytes).sum::<u64>() / MODELS.len() as u64
 }
 
+/// Profiled batch cost-curve alpha for a model.
+#[inline]
+pub fn batch_alpha(id: ModelId) -> f64 {
+    MODELS[id as usize].batch_alpha
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +92,15 @@ mod tests {
     fn all_fit_bitmap_id_space() {
         // §5.2: 64-bit bitmap encoding limits active models to ids 0..63.
         assert!(MODELS.iter().all(|m| m.id < 64));
+    }
+
+    #[test]
+    fn batch_alphas_are_sublinear_fractions() {
+        // alpha ∈ (0, 1): a batch is cheaper than serial (alpha < 1) but
+        // never cheaper than one instance (alpha > 0).
+        for m in MODELS.iter() {
+            assert!(m.batch_alpha > 0.0 && m.batch_alpha < 1.0, "{}", m.name);
+        }
+        assert_eq!(batch_alpha(DETR), 0.50);
     }
 }

@@ -1,0 +1,107 @@
+//! Batching sweep — worker execute-path coalescing under same-model load.
+//!
+//! Runs the Compass scheduler on an all-VPA workload (every job funnels
+//! through the same OPT → BART model pair, so same-model queue-mates are
+//! common) at a rate that builds real queues, sweeping `batch_max` over
+//! {1, 2, 4, 8}. The expected shape: `batch_max = 1` is the unbatched
+//! baseline; larger batches amortize the activation pass per the sublinear
+//! cost curve `alpha·max + (1-alpha)·sum`, draining queues faster and
+//! cutting mean latency until the window-hold cost catches up.
+
+use super::{Runner, Scale};
+use crate::config::{ClusterConfig, SchedulerKind};
+use crate::core::Micros;
+use crate::metrics::MetricsSink;
+use crate::util::table;
+use crate::workload;
+use crate::Simulator;
+
+/// Request rate for the sweep: high enough that queues form on the five
+/// default workers, the regime batching exists for.
+const SWEEP_RATE: f64 = 4.0;
+/// Batching window used for every enabled cell, µs.
+const SWEEP_WINDOW_US: Micros = 1_000;
+
+/// Structured result: one row per swept `batch_max`.
+pub struct BatchSweepResult {
+    pub batch_maxes: Vec<usize>,
+    pub mean_latency_s: Vec<f64>,
+    pub mean_slowdown: Vec<f64>,
+    pub median_slowdown: Vec<f64>,
+}
+
+impl BatchSweepResult {
+    pub fn mean_latency_at(&self, batch_max: usize) -> f64 {
+        let i = self.batch_maxes.iter().position(|&b| b == batch_max).expect("swept batch_max");
+        self.mean_latency_s[i]
+    }
+}
+
+fn scenario(batch_max: usize, scale: Scale) -> MetricsSink {
+    let cfg = ClusterConfig::default()
+        .with_scheduler(SchedulerKind::Compass)
+        .with_seed(scale.seed)
+        .with_batching(batch_max, SWEEP_WINDOW_US);
+    // Same-model-heavy stream: VPA-only mix, shared across all cells.
+    let jobs = workload::poisson(
+        SWEEP_RATE,
+        scale.jobs,
+        &[0.0, 0.0, 1.0, 0.0],
+        scale.seed ^ 0x9e37_79b9,
+    );
+    Simulator::simulate(cfg, jobs).metrics
+}
+
+/// Every cell is an independent run: fan them across the runner's pool.
+/// Results come back in sweep order, so the printed table is stable.
+pub fn compute_sweep(runner: &Runner, scale: Scale) -> BatchSweepResult {
+    let batch_maxes = vec![1usize, 2, 4, 8];
+    let cells = runner.par_map(&batch_maxes, |_, &b| {
+        let m = scenario(b, scale);
+        (m.mean_latency_s(), m.mean_slowdown(), m.median_slowdown())
+    });
+    BatchSweepResult {
+        batch_maxes,
+        mean_latency_s: cells.iter().map(|c| c.0).collect(),
+        mean_slowdown: cells.iter().map(|c| c.1).collect(),
+        median_slowdown: cells.iter().map(|c| c.2).collect(),
+    }
+}
+
+pub fn run(scale: Scale) -> BatchSweepResult {
+    let result = compute_sweep(&Runner::from_env(), scale);
+
+    println!("\n=== Batching sweep — VPA-only load, {SWEEP_RATE} req/s, compass ===\n");
+    let mut rows = Vec::new();
+    for (i, &b) in result.batch_maxes.iter().enumerate() {
+        rows.push(vec![
+            format!("{b}"),
+            format!("{:.3}", result.mean_latency_s[i]),
+            format!("{:.2}", result.mean_slowdown[i]),
+            format!("{:.2}", result.median_slowdown[i]),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(&["batch_max", "mean latency s", "mean slowdown", "median slowdown"], &rows)
+    );
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shows_batching_wins_under_same_model_load() {
+        let scale = Scale { jobs: 80, seed: 17 };
+        let r = compute_sweep(&Runner::serial(), scale);
+        assert_eq!(r.batch_maxes, vec![1, 2, 4, 8]);
+        assert!(r.mean_latency_s.iter().all(|&l| l > 0.0));
+        assert!(
+            r.mean_latency_at(8) < r.mean_latency_at(1),
+            "batch_max 8 must beat unbatched: {:?}",
+            r.mean_latency_s
+        );
+    }
+}

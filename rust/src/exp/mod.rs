@@ -10,8 +10,10 @@
 //! | fig8     | Fig. 8 (SST staleness sensitivity heatmap)           |
 //! | fig9     | Fig. 9 (production-trace replay)                     |
 //! | fig10    | Fig. 10 (scalability: Compass vs Hash, 5..250 workers)|
+//! | batch    | execute-path batching sweep (batch_max 1..8)         |
 //! | validate | §5.4 simulator-vs-live validation                    |
 
+pub mod batch;
 pub mod fig10;
 pub mod fig6;
 pub mod fig7;
@@ -112,6 +114,9 @@ pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
         "fig10" => {
             fig10::run(scale, args.flag("quick"));
         }
+        "batch" => {
+            batch::run(scale);
+        }
         "all" => {
             fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)");
             fig6::boxes(2.0, scale, "Figure 6b — high load (2 req/s)");
@@ -121,6 +126,7 @@ pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
             fig8::run(scale);
             fig9::run(scale);
             fig10::run(scale, args.flag("quick"));
+            batch::run(scale);
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }

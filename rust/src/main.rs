@@ -16,11 +16,13 @@ fn usage() -> ! {
          commands:\n\
          \x20 simulate    --scheduler compass|jit|heft|hash --rate R --jobs N\n\
          \x20             --workers W --seed S\n\
+         \x20             [--batch-max B] [--batch-window-us U] [--batch-alpha A]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
-         \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|all>\n\
+         \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|batch|all>\n\
          \x20             [--quick] [--seed S] [--threads N]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 serve       --rate R --jobs N [--workers W] [--artifacts DIR]\n\
+         \x20             [--batch-max B] [--batch-window-us U] [--batch-alpha A]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 validate    [--jobs N] [--artifacts DIR]\n\
          \x20 models      [--artifacts DIR]"
@@ -53,6 +55,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         .with_seed(args.get_u64("seed", 42));
     // Either output needs the tracer running.
     cfg.trace.enabled |= trace_out.is_some() || metrics_out.is_some();
+    cfg.cost.batch.batch_max = args.get_usize("batch-max", 1).max(1);
+    cfg.cost.batch.window_us = args.get_u64("batch-window-us", cfg.cost.batch.window_us);
+    if let Some(a) = args.get("batch-alpha") {
+        cfg.cost.batch.alpha_override = Some(a.parse()?);
+    }
     let seed = cfg.seed ^ 0x9e37;
     let jobs = compass::workload::poisson(
         args.get_f64("rate", 2.0),

@@ -23,6 +23,8 @@ pub struct CostModel {
     pub pcie_bytes_per_us: f64,
     /// Fixed per-fetch PCIe setup cost δ_PCIe, µs.
     pub delta_pcie_us: Micros,
+    /// Per-model batching on the worker execute path (§5 batching windows).
+    pub batch: BatchConfig,
 }
 
 impl Default for CostModel {
@@ -32,7 +34,74 @@ impl Default for CostModel {
             delta_net_us: 50,
             pcie_bytes_per_us: 12_000.0,
             delta_pcie_us: 2 * MS,
+            batch: BatchConfig::default(),
         }
+    }
+}
+
+/// Batching knobs for the worker execute path. With `batch_max = 1`
+/// (the default) batching is fully disabled and every execution path is
+/// bit-identical to the unbatched scheduler.
+///
+/// The cost curve follows the sublinear law `R_batch(b) = R · (alpha +
+/// (1-alpha)·b)` for b same-runtime members: a batch costs one "full"
+/// activation pass plus a discounted marginal pass per extra member.
+/// Generalized to mixed solo runtimes as `alpha·max + (1-alpha)·sum`,
+/// which reduces to R at b = 1 for any alpha.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Max same-model queue entries coalesced into one execution (1 = off).
+    pub batch_max: usize,
+    /// How long a lone task holds the GPU idle waiting for queue-mates, µs.
+    pub window_us: Micros,
+    /// Global alpha override; `None` uses each model's profiled
+    /// `batch_alpha` from `dfg::models`.
+    pub alpha_override: Option<f64>,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { batch_max: 1, window_us: MS, alpha_override: None }
+    }
+}
+
+impl BatchConfig {
+    /// Batching changes behavior only past batch size 1.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.batch_max > 1
+    }
+
+    /// Effective alpha for a model whose profiled alpha is `model_alpha`.
+    #[inline]
+    pub fn alpha(&self, model_alpha: f64) -> f64 {
+        self.alpha_override.unwrap_or(model_alpha).clamp(0.0, 1.0)
+    }
+
+    /// Runtime of one batch whose members have max solo runtime `max_us`
+    /// and summed solo runtime `sum_us`.
+    #[inline]
+    pub fn batch_runtime_us(&self, max_us: Micros, sum_us: Micros, alpha: f64) -> Micros {
+        if max_us == sum_us {
+            // Single member (or degenerate zero-runtime mates): exactly the
+            // solo runtime, no float rounding.
+            return sum_us;
+        }
+        (alpha * max_us as f64 + (1.0 - alpha) * sum_us as f64) as Micros
+    }
+
+    /// Estimated time to drain `count` queued same-model tasks of summed
+    /// solo runtime `sum_us` under coalescing: each of the ⌈count/max⌉
+    /// batches pays one mean-runtime "full" pass, every member pays the
+    /// `(1-alpha)` marginal pass. Exactly `sum_us` when batching is off.
+    #[inline]
+    pub fn drain_estimate_us(&self, count: usize, sum_us: Micros, alpha: f64) -> Micros {
+        if self.batch_max <= 1 || count <= 1 {
+            return sum_us;
+        }
+        let batches = (count + self.batch_max - 1) / self.batch_max;
+        let mean = sum_us as f64 / count as f64;
+        ((1.0 - alpha) * sum_us as f64 + alpha * mean * batches as f64) as Micros
     }
 }
 
@@ -95,5 +164,54 @@ mod tests {
         let c = CostModel::default();
         assert_eq!(c.td_transfer(0), c.delta_net_us);
         assert!(c.td_transfer(1000) < 2 * c.delta_net_us);
+    }
+
+    #[test]
+    fn batching_off_by_default() {
+        let b = CostModel::default().batch;
+        assert!(!b.enabled());
+        assert_eq!(b.batch_max, 1);
+    }
+
+    #[test]
+    fn batch_runtime_reduces_to_solo_at_b1() {
+        let b = BatchConfig { batch_max: 8, ..Default::default() };
+        for alpha in [0.0, 0.3, 0.5, 1.0] {
+            assert_eq!(b.batch_runtime_us(7000, 7000, alpha), 7000);
+        }
+    }
+
+    #[test]
+    fn batch_runtime_sublinear_in_members() {
+        let b = BatchConfig { batch_max: 8, ..Default::default() };
+        // 4 members of 10 ms each at alpha 0.5: 0.5·10 + 0.5·40 = 25 ms,
+        // strictly between one member (10) and serial execution (40).
+        let r = b.batch_runtime_us(10_000, 40_000, 0.5);
+        assert_eq!(r, 25_000);
+        assert!(r > 10_000 && r < 40_000);
+    }
+
+    #[test]
+    fn drain_estimate_exact_when_disabled() {
+        let b = BatchConfig::default();
+        assert_eq!(b.drain_estimate_us(5, 50_000, 0.5), 50_000);
+        let on = BatchConfig { batch_max: 4, ..Default::default() };
+        assert_eq!(on.drain_estimate_us(1, 9000, 0.5), 9000);
+    }
+
+    #[test]
+    fn drain_estimate_matches_batch_runtime_for_uniform_queue() {
+        // 8 tasks of 10 ms, batch_max 4 → two batches of 4: each
+        // 0.5·10 + 0.5·40 = 25 ms, total 50 ms.
+        let b = BatchConfig { batch_max: 4, ..Default::default() };
+        assert_eq!(b.drain_estimate_us(8, 80_000, 0.5), 50_000);
+    }
+
+    #[test]
+    fn alpha_override_wins_and_clamps() {
+        let b = BatchConfig { batch_max: 2, alpha_override: Some(2.0), ..Default::default() };
+        assert_eq!(b.alpha(0.5), 1.0);
+        let b = BatchConfig { batch_max: 2, ..Default::default() };
+        assert_eq!(b.alpha(0.6), 0.6);
     }
 }

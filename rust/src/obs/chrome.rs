@@ -60,7 +60,9 @@ pub fn chrome_trace(trace: &Trace) -> String {
             | TraceEvent::CacheMiss { worker, .. }
             | TraceEvent::CacheInsert { worker, .. }
             | TraceEvent::CacheEvict { worker, .. }
-            | TraceEvent::SstStaleness { worker, .. } => {
+            | TraceEvent::SstStaleness { worker, .. }
+            | TraceEvent::BatchFormed { worker, .. }
+            | TraceEvent::BatchExecuted { worker, .. } => {
                 workers.insert(worker);
             }
             TraceEvent::Decision { decider, chosen, .. } => {
@@ -160,6 +162,16 @@ pub fn chrome_trace(trace: &Trace) -> String {
                     "\"load_staleness_us\":{load_staleness_us},\"cache_staleness_us\":{cache_staleness_us}"
                 );
                 instant(&mut out, "sst staleness", "sst", worker as u32, t, &args);
+            }
+            TraceEvent::BatchFormed { worker, model, size, t } => {
+                let args = format!("\"model\":{model},\"size\":{size}");
+                let name = format!("batch formed m{model} x{size}");
+                instant(&mut out, &name, "batch", worker as u32, t, &args);
+            }
+            TraceEvent::BatchExecuted { worker, model, size, t } => {
+                let args = format!("\"model\":{model},\"size\":{size}");
+                let name = format!("batch executed m{model} x{size}");
+                instant(&mut out, &name, "batch", worker as u32, t, &args);
             }
             _ => {}
         }

@@ -136,6 +136,11 @@ pub enum TraceEvent {
     CacheInsert { worker: u16, model: ModelId, free_bytes: u64, t: Micros },
     CacheEvict { worker: u16, model: ModelId, free_bytes: u64, t: Micros },
     SstStaleness { worker: u16, load_staleness_us: Micros, cache_staleness_us: Micros, t: Micros },
+    /// A multi-candidate batch coalesced on a worker (size ≥ 1 members of
+    /// one model, about to execute as one pass).
+    BatchFormed { worker: u16, model: ModelId, size: u16, t: Micros },
+    /// A batch execution finished; its `size` members all ended at `t`.
+    BatchExecuted { worker: u16, model: ModelId, size: u16, t: Micros },
 }
 
 impl TraceEvent {
@@ -154,7 +159,9 @@ impl TraceEvent {
             | TraceEvent::CacheMiss { t, .. }
             | TraceEvent::CacheInsert { t, .. }
             | TraceEvent::CacheEvict { t, .. }
-            | TraceEvent::SstStaleness { t, .. } => t,
+            | TraceEvent::SstStaleness { t, .. }
+            | TraceEvent::BatchFormed { t, .. }
+            | TraceEvent::BatchExecuted { t, .. } => t,
         }
     }
 }
@@ -403,6 +410,18 @@ impl Trace {
         h
     }
 
+    /// Histogram of executed batch sizes (unitless member counts; includes
+    /// size-1 batches, so the distribution shows how often coalescing won).
+    pub fn batch_size_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for ev in &self.events {
+            if let TraceEvent::BatchExecuted { size, .. } = *ev {
+                h.record(size as u64);
+            }
+        }
+        h
+    }
+
     pub fn count<F: Fn(&TraceEvent) -> bool>(&self, f: F) -> usize {
         self.events.iter().filter(|e| f(e)).count()
     }
@@ -474,6 +493,21 @@ mod tests {
             assert!(c.contains(w), "worker {w} should survive");
         }
         assert!(!c.contains(0));
+    }
+
+    #[test]
+    fn batch_size_hist_counts_executed_batches() {
+        let trace = Trace {
+            events: vec![
+                TraceEvent::BatchFormed { worker: 0, model: 1, size: 4, t: 10 },
+                TraceEvent::BatchExecuted { worker: 0, model: 1, size: 4, t: 50 },
+                TraceEvent::BatchExecuted { worker: 1, model: 2, size: 1, t: 60 },
+            ],
+            dropped: 0,
+        };
+        let h = trace.batch_size_hist();
+        assert_eq!(h.count(), 2);
+        assert!(h.max() >= 4);
     }
 
     #[test]

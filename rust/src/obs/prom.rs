@@ -44,6 +44,27 @@ fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
     let _ = writeln!(out, "{name}_count {}", h.count());
 }
 
+/// Emit a histogram of *unitless* samples (e.g. batch member counts): `le`
+/// stays in the sample's own unit instead of being scaled to seconds.
+fn histogram_unitless(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &c) in h.bucket_counts().iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        if i + 1 < super::hist::N_BUCKETS {
+            let le = Histogram::bucket_upper(i);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
 /// Render an end-of-run metrics snapshot, optionally enriched with
 /// phase-latency histograms from `trace`.
 pub fn prometheus_snapshot(m: &MetricsSink, trace: Option<&Trace>) -> String {
@@ -152,6 +173,31 @@ pub fn prometheus_snapshot(m: &MetricsSink, trace: Option<&Trace>) -> String {
             "SST load-row staleness at decision time.",
             &tr.sst_staleness_hist(),
         );
+        histogram_unitless(
+            &mut out,
+            "compass_batch_size",
+            "Members per executed batch (1 = solo execution).",
+            &tr.batch_size_hist(),
+        );
+        let (mut batches, mut batched_tasks) = (0u64, 0u64);
+        for ev in &tr.events {
+            if let super::TraceEvent::BatchExecuted { size, .. } = *ev {
+                batches += 1;
+                batched_tasks += size as u64;
+            }
+        }
+        counter(
+            &mut out,
+            "compass_batches_executed_total",
+            "Batches retired on the execute path.",
+            batches,
+        );
+        counter(
+            &mut out,
+            "compass_batched_tasks_total",
+            "Tasks retired as members of executed batches.",
+            batched_tasks,
+        );
         counter(
             &mut out,
             "compass_trace_events_total",
@@ -224,6 +270,28 @@ mod tests {
         assert!(text.contains("compass_task_queue_wait_seconds_count 1"));
         assert!(text.contains("compass_task_exec_seconds_count 1"));
         assert!(text.contains("compass_trace_events_total 3"));
+    }
+
+    #[test]
+    fn trace_adds_batch_series() {
+        let trace = Trace {
+            events: vec![
+                TraceEvent::BatchFormed { worker: 0, model: 2, size: 3, t: 10 },
+                TraceEvent::BatchExecuted { worker: 0, model: 2, size: 3, t: 40 },
+                TraceEvent::BatchExecuted { worker: 1, model: 2, size: 1, t: 50 },
+            ],
+            dropped: 0,
+        };
+        let text = prometheus_snapshot(&sink(), Some(&trace));
+        assert!(text.contains("compass_batch_size_count 2"));
+        assert!(text.contains("compass_batch_size_sum 4"));
+        assert!(text.contains("compass_batches_executed_total 2"));
+        assert!(text.contains("compass_batched_tasks_total 4"));
+        // Unitless buckets: le stays in member counts, not seconds.
+        assert!(text.contains("compass_batch_size_bucket{le=\"1\"} 1"));
+        let helps = text.matches("# HELP").count();
+        let types = text.matches("# TYPE").count();
+        assert_eq!(helps, types);
     }
 
     #[test]

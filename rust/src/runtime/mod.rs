@@ -24,6 +24,11 @@ pub struct ArtifactMeta {
     pub model_id: u8,
     pub seq_len: usize,
     pub d_model: usize,
+    /// Largest batch the compiled executable accepts in one call. 1 (the
+    /// default when the manifest omits the key) means the artifact was
+    /// AOT-compiled for a single `[seq_len, d_model]` activation and
+    /// batched execution must fall back to one call per member.
+    pub batch_max: usize,
     pub path: PathBuf,
     pub smoke_input_abssum: f64,
     pub smoke_output_abssum: f64,
@@ -47,6 +52,40 @@ impl CompiledModel {
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a coalesced batch of forward passes. When the manifest marks
+    /// this artifact batch-capable (`batch_max > 1`) and the batch fits,
+    /// all members are stacked into one `[batch_max, seq_len*d_model]`
+    /// activation and run as a single PJRT call (short batches are
+    /// zero-padded; padded rows are discarded). Otherwise each member runs
+    /// through its own `execute` call — same results, no stacking.
+    pub fn execute_batch(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let row = self.meta.seq_len * self.meta.d_model;
+        for x in inputs {
+            if x.len() != row {
+                bail!(
+                    "batch input len {} != {}x{}",
+                    x.len(),
+                    self.meta.seq_len,
+                    self.meta.d_model
+                );
+            }
+        }
+        if inputs.len() <= 1 || self.meta.batch_max < inputs.len() {
+            return inputs.iter().map(|x| self.execute(x)).collect();
+        }
+        let b = self.meta.batch_max;
+        let mut flat = vec![0f32; b * row];
+        for (i, x) in inputs.iter().enumerate() {
+            flat[i * row..(i + 1) * row].copy_from_slice(x);
+        }
+        let lit = xla::Literal::vec1(&flat).reshape(&[b as i64, row as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?.to_vec::<f32>()?;
+        let mut rows = split_rows(out, b);
+        rows.truncate(inputs.len());
+        Ok(rows)
     }
 
     /// The deterministic smoke input python used (sin(0.01 * i)).
@@ -108,6 +147,11 @@ impl Runtime {
                 model_id: get("model_id")?.as_u64().unwrap_or(255) as u8,
                 seq_len: get("seq_len")?.as_u64().unwrap_or(0) as usize,
                 d_model: get("d_model")?.as_u64().unwrap_or(0) as usize,
+                batch_max: m
+                    .get("batch_max")
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(1)
+                    .max(1) as usize,
                 path: dir
                     .join(get("path")?.as_str().ok_or_else(|| anyhow!("path not a string"))?),
                 smoke_input_abssum: get("smoke_input_abssum")?
@@ -182,9 +226,60 @@ impl Runtime {
     }
 }
 
+/// Split a flat stacked output into `rows` equal per-member chunks.
+fn split_rows(flat: Vec<f32>, rows: usize) -> Vec<Vec<f32>> {
+    if rows <= 1 {
+        return vec![flat];
+    }
+    let per = (flat.len() / rows).max(1);
+    flat.chunks(per).take(rows).map(|c| c.to_vec()).collect()
+}
+
 /// Default artifacts directory: $COMPASS_ARTIFACTS or ./artifacts.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var_os("COMPASS_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rows_partitions_evenly() {
+        let rows = split_rows((0..12).map(|v| v as f32).collect(), 3);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(rows[2][0], 8.0);
+    }
+
+    #[test]
+    fn split_rows_single_is_identity() {
+        let flat: Vec<f32> = vec![1.0, 2.0];
+        assert_eq!(split_rows(flat.clone(), 1), vec![flat]);
+    }
+
+    #[test]
+    fn manifest_batch_max_defaults_to_one() {
+        let dir = std::env::temp_dir().join(format!("compass-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"opt": {"model_id": 0, "seq_len": 4, "d_model": 8, "path": "opt.hlo.txt",
+                 "smoke_input_abssum": 1.0, "smoke_output_abssum": 2.0},
+                "bart": {"model_id": 5, "seq_len": 4, "d_model": 8, "batch_max": 4,
+                 "path": "bart.hlo.txt", "smoke_input_abssum": 1.0,
+                 "smoke_output_abssum": 2.0}}"#,
+        )
+        .unwrap();
+        let mut metas = Runtime::read_manifest(&dir).unwrap();
+        metas.sort_by(|a, b| a.name.cmp(&b.name));
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].name, "bart");
+        assert_eq!(metas[0].batch_max, 4);
+        assert_eq!(metas[1].name, "opt");
+        assert_eq!(metas[1].batch_max, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

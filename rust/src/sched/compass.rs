@@ -73,15 +73,21 @@ impl Scheduler for Compass {
     ) -> Adfg {
         let n = dfg.len();
         let w_count = view.n_workers();
+        let batch = &view.cost.batch;
+        let batching = batch.enabled();
         // Line 2: worker_FT_map from the Global State Monitor — filled into
         // the caller-owned scratch, so planning allocates nothing per job
         // beyond the returned ADFG (which outlives this call as job state).
         let mut scratch = view.scratch.borrow_mut();
-        let PlanScratch { worker_ft, task_ft } = &mut *scratch;
+        let PlanScratch { worker_ft, task_ft, planned_models } = &mut *scratch;
         worker_ft.clear();
         worker_ft.extend((0..w_count).map(|w| view.ft(w)));
         task_ft.clear();
         task_ft.resize(n, 0);
+        if batching {
+            planned_models.clear();
+            planned_models.resize(w_count * crate::dfg::models::N_MODELS, 0);
+        }
         let mut adfg = Adfg::unassigned(n);
 
         // Lines 4-12: descending rank order (precomputed statically, §4.2.1).
@@ -112,12 +118,37 @@ impl Scheduler for Compass {
                 };
                 // Line 8: x ← max(worker_FT_map[w], AT_allInputs(t, w)).
                 let x = worker_ft[w].max(at_inputs);
-                // Line 9: FT(t,w) ← x + TD_model + R(t, w).
-                let td_model = match model {
-                    Some(m) => self.td_model_arms(m, fetch_cost, w, view),
-                    None => 0,
+                // Line 9: FT(t,w) ← x + TD_model + R(t, w). Under batching,
+                // a task placed where this plan already put same-model work
+                // would coalesce with it: the model is (being) fetched there
+                // already, and a member joining an open batch pays only the
+                // (1-alpha) marginal pass instead of a full runtime.
+                let (td_model, r_us) = match model {
+                    Some(m) => {
+                        let base_r = view.r(dfg, t, w);
+                        if batching {
+                            let cnt =
+                                planned_models[w * crate::dfg::models::N_MODELS + m as usize];
+                            let td = if cnt > 0 {
+                                0
+                            } else {
+                                self.td_model_arms(m, fetch_cost, w, view)
+                            };
+                            let r = if cnt % batch.batch_max as u32 != 0 {
+                                let alpha =
+                                    batch.alpha(crate::dfg::models::batch_alpha(m));
+                                ((1.0 - alpha) * base_r as f64) as Micros
+                            } else {
+                                base_r
+                            };
+                            (td, r)
+                        } else {
+                            (self.td_model_arms(m, fetch_cost, w, view), base_r)
+                        }
+                    }
+                    None => (0, view.r(dfg, t, w)),
                 };
-                let ft = x + td_model + view.r(dfg, t, w);
+                let ft = x + td_model + r_us;
                 probe.offer(w, ft);
                 if ft < best_ft {
                     best_ft = ft;
@@ -128,6 +159,11 @@ impl Scheduler for Compass {
             adfg.set(t, best_w);
             task_ft[t] = best_ft;
             worker_ft[best_w] = best_ft;
+            if batching {
+                if let Some(m) = dfg.vertices[t].model {
+                    planned_models[best_w * crate::dfg::models::N_MODELS + m as usize] += 1;
+                }
+            }
         }
         adfg
     }
@@ -333,6 +369,99 @@ mod tests {
         let ctx =
             AssignCtx { job: &j, dfg: &dfg, task: dfg.exit, planned: Some(2), pred_outputs: &outs };
         assert_eq!(c.assign(&ctx, &view), 2, "join tasks are pinned");
+    }
+
+    /// Fan-out DFG whose two middle tasks share one model: 0 → {1, 2} → 3.
+    fn same_model_fanout(cost: &CostModel) -> crate::dfg::Dfg {
+        use crate::dfg::{Dfg, PipelineKind, Vertex};
+        let v = |id, model, rt| Vertex {
+            id,
+            name: "t",
+            model,
+            mean_runtime_us: rt,
+            output_bytes: 1000,
+        };
+        Dfg::new(
+            PipelineKind::Vpa,
+            vec![
+                v(0, None, MS),
+                v(1, Some(OPT), 100 * MS),
+                v(2, Some(OPT), 100 * MS),
+                v(3, None, MS),
+            ],
+            &[(0, 1), (0, 2), (1, 3), (2, 3)],
+            cost,
+        )
+    }
+
+    /// The score Algorithm 1 offered for worker `w` while planning `task`.
+    fn offered(recs: &[(usize, crate::obs::CandidateSet)], task: usize, w: u16) -> Micros {
+        recs.iter()
+            .find(|(t, _)| *t == task)
+            .and_then(|(_, c)| c.iter().find(|&(cw, _)| cw == w))
+            .map(|(_, s)| s)
+            .expect("candidate recorded")
+    }
+
+    #[test]
+    fn batching_discounts_same_model_followup() {
+        let mut cost = CostModel::default();
+        let dfg = same_model_fanout(&cost);
+        let mut rows = vec![SstRow::default(); 3];
+        for r in rows.iter_mut() {
+            r.free_cache_bytes = 16 * GB;
+        }
+        let speed = vec![1.0; 3];
+        let c = Compass::new(CompassConfig::default());
+        let probe_plan = |cost: &CostModel| {
+            let view = view_with(&rows, cost, &speed, &PlanCell::default());
+            let mut probe = crate::sched::DecisionProbe::on();
+            let adfg = c.plan_probed(&job(dfg.kind), &dfg, &view, &mut probe);
+            (adfg, probe.take_records())
+        };
+        let (off_adfg, off_recs) = probe_plan(&cost);
+        cost.batch.batch_max = 4;
+        cost.batch.alpha_override = Some(0.5);
+        let (on_adfg, on_recs) = probe_plan(&cost);
+        assert!(on_adfg.assignment.iter().all(|a| a.is_some()));
+        // Task 1 plans before any same-model placement: scores unchanged.
+        let w1 = off_adfg.get(1).unwrap() as u16;
+        assert_eq!(offered(&off_recs, 1, w1), offered(&on_recs, 1, w1));
+        // Task 2 on task 1's worker joins the plan's open batch: no second
+        // model fetch and only the (1-alpha) marginal pass.
+        let score_off = offered(&off_recs, 2, w1);
+        let score_on = offered(&on_recs, 2, w1);
+        assert!(
+            score_on < score_off,
+            "batching must discount a same-model follow-up: on={score_on} off={score_off}"
+        );
+        let fetch = cost.td_model(crate::dfg::models::model_bytes(OPT));
+        assert!(score_off - score_on >= fetch + 50 * MS / 2, "fetch + alpha·R discount");
+    }
+
+    #[test]
+    fn batch_max_one_plans_identically() {
+        let mut cost = CostModel::default();
+        cost.batch.window_us = 777;
+        cost.batch.alpha_override = Some(0.2);
+        // batch_max stays 1: every estimate must match the default plan.
+        let dfg = same_model_fanout(&CostModel::default());
+        let rows = vec![SstRow::default(); 3];
+        let speed = vec![1.0; 3];
+        let c = Compass::new(CompassConfig::default());
+        let base = c.plan(
+            &job(dfg.kind),
+            &dfg,
+            &view_with(&rows, &CostModel::default(), &speed, &PlanCell::default()),
+        );
+        let mut probe = crate::sched::DecisionProbe::on();
+        let tweaked = c.plan_probed(
+            &job(dfg.kind),
+            &dfg,
+            &view_with(&rows, &cost, &speed, &PlanCell::default()),
+            &mut probe,
+        );
+        assert_eq!(base.assignment, tweaked.assignment);
     }
 
     #[test]

@@ -33,7 +33,7 @@ impl Scheduler for Heft {
         // caller-owned scratch's worker_ft doubles as the availability map,
         // so planning allocates nothing per job beyond the returned ADFG.
         let mut scratch = view.scratch.borrow_mut();
-        let PlanScratch { worker_ft: avail, task_ft } = &mut *scratch;
+        let PlanScratch { worker_ft: avail, task_ft, .. } = &mut *scratch;
         avail.clear();
         avail.resize(w_count, view.now);
         task_ft.clear();

@@ -33,6 +33,11 @@ pub struct PlanScratch {
     pub worker_ft: Vec<Micros>,
     /// FT(t) of already-placed tasks (Alg. 1 line 10).
     pub task_ft: Vec<Micros>,
+    /// Per-(worker, model) count of tasks this plan already placed, indexed
+    /// `w * N_MODELS + m`. Only maintained when batching is enabled: lets
+    /// Algorithm 1 charge the discounted marginal runtime (and a zero model
+    /// fetch) when a task would join a batch the plan itself is building.
+    pub planned_models: Vec<u32>,
 }
 
 /// Interior-mutability cell carrying [`PlanScratch`] through the shared

@@ -1,10 +1,13 @@
 //! Per-worker simulation state: execution queue, GPU cache, fetch/execute
-//! occupancy, busy-time accounting, and the live SST row.
+//! occupancy, batch coalescing state, busy-time accounting, and the live
+//! SST row.
 
 use crate::config::ClusterConfig;
 use crate::core::{Micros, ModelId, TaskId, WorkerId};
+use crate::dfg::models::{batch_alpha, N_MODELS};
 use crate::gpu::GpuCache;
 use crate::metrics::{BusyTracker, WorkerMetrics};
+use crate::net::BatchConfig;
 use crate::sst::SstRow;
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
@@ -26,9 +29,21 @@ pub struct SimWorker {
     pub id: WorkerId,
     pub gpu: GpuCache,
     queue: VecDeque<QTask>,
-    running: Option<QTask>,
+    /// The executing batch (one entry when batching is off). All members
+    /// share one model and complete together at `exec_end`.
+    running: Vec<QTask>,
     exec_end: Micros,
     fetching: Option<ModelId>,
+    /// Batch-window hold deadline: a lone startable leader waits for
+    /// queue-mates until this time before executing solo.
+    hold_until: Option<Micros>,
+    /// Incremental Σ runtime_us over the queue — keeps `ft_estimate` O(1)
+    /// instead of re-summing the VecDeque per scheduler probe.
+    queued_runtime_us: Micros,
+    /// Per-model queued (count, Σ runtime_us) — the grouping the
+    /// batching-aware drain estimate needs, maintained incrementally.
+    queued_count: [u32; N_MODELS],
+    queued_sum_us: [Micros; N_MODELS],
     busy: BusyTracker,
     executed: u64,
     rng: Rng,
@@ -43,9 +58,13 @@ impl SimWorker {
             id,
             gpu,
             queue: VecDeque::new(),
-            running: None,
+            running: Vec::new(),
             exec_end: 0,
             fetching: None,
+            hold_until: None,
+            queued_runtime_us: 0,
+            queued_count: [0; N_MODELS],
+            queued_sum_us: [0; N_MODELS],
             busy: BusyTracker::default(),
             executed: 0,
             rng,
@@ -58,20 +77,52 @@ impl SimWorker {
 
     /// Append every queued task's model to `out` — the eviction planner's
     /// queue-lookahead window (§5.3.2) — into a caller-reused buffer, so a
-    /// dispatch scan allocates nothing in steady state.
+    /// dispatch scan allocates nothing in steady state. Deduplicated in
+    /// order of first appearance: repeats of one model never push other
+    /// models out of the lookahead window.
     pub fn queue_models_into(&self, out: &mut Vec<ModelId>) {
-        out.extend(self.queue.iter().filter_map(|q| q.model));
+        let mut seen: u64 = 0;
+        for q in self.queue.iter() {
+            if let Some(m) = q.model {
+                if seen & (1 << m) == 0 {
+                    seen |= 1 << m;
+                    out.push(m);
+                }
+            }
+        }
     }
 
     pub fn running(&self) -> Option<&QTask> {
-        self.running.as_ref()
+        self.running.first()
+    }
+
+    /// All members of the executing batch (empty when idle).
+    pub fn running_batch(&self) -> &[QTask] {
+        &self.running
     }
 
     pub fn fetching(&self) -> Option<ModelId> {
         self.fetching
     }
 
+    pub fn hold_until(&self) -> Option<Micros> {
+        self.hold_until
+    }
+
+    pub fn set_hold(&mut self, deadline: Micros) {
+        self.hold_until = Some(deadline);
+    }
+
+    pub fn clear_hold(&mut self) {
+        self.hold_until = None;
+    }
+
     pub fn enqueue(&mut self, qt: QTask) {
+        self.queued_runtime_us += qt.runtime_us;
+        if let Some(m) = qt.model {
+            self.queued_count[m as usize] += 1;
+            self.queued_sum_us[m as usize] += qt.runtime_us;
+        }
         self.queue.push_back(qt);
     }
 
@@ -90,26 +141,73 @@ impl SimWorker {
         self.gpu.insert(m, now);
     }
 
+    /// Pop queue[idx], maintaining the incremental load accounting.
+    fn take_queued(&mut self, idx: usize) -> QTask {
+        let qt = self.queue.remove(idx).expect("queue index");
+        self.queued_runtime_us -= qt.runtime_us;
+        if let Some(m) = qt.model {
+            self.queued_count[m as usize] -= 1;
+            self.queued_sum_us[m as usize] -= qt.runtime_us;
+        }
+        qt
+    }
+
     /// Pop queue[idx] and start executing it; pins its model.
     pub fn start_task(&mut self, idx: usize, now: Micros, end: Micros) -> &QTask {
-        let qt = self.queue.remove(idx).expect("start_task index");
+        let qt = self.take_queued(idx);
         if let Some(m) = qt.model {
             self.gpu.pin(m);
         }
         self.busy.start(now);
         self.exec_end = end;
         self.executed += 1;
-        self.running = Some(qt);
-        self.running.as_ref().unwrap()
+        self.hold_until = None;
+        debug_assert!(self.running.is_empty());
+        self.running.push(qt);
+        &self.running[0]
+    }
+
+    /// Pop the given queue indices (ascending, all same-model) and start
+    /// them as one batch ending at `end`. Each member pins the model once
+    /// (pins are counted, so the batch holds exactly `len` pins).
+    pub fn start_batch(&mut self, indices: &[usize], now: Micros, end: Micros) {
+        debug_assert!(self.running.is_empty());
+        debug_assert!(!indices.is_empty());
+        for &idx in indices.iter().rev() {
+            let qt = self.take_queued(idx);
+            if let Some(m) = qt.model {
+                self.gpu.pin(m);
+            }
+            self.running.push(qt);
+        }
+        self.running.reverse();
+        self.busy.start(now);
+        self.exec_end = end;
+        self.executed += indices.len() as u64;
+        self.hold_until = None;
     }
 
     pub fn finish_task(&mut self, now: Micros) -> QTask {
-        let qt = self.running.take().expect("finish without running");
+        debug_assert_eq!(self.running.len(), 1, "finish_task on a batch");
+        let qt = self.running.pop().expect("finish without running");
         if let Some(m) = qt.model {
             self.gpu.unpin(m);
         }
         self.busy.stop(now);
         qt
+    }
+
+    /// Retire every member of the executing batch into `out` (a
+    /// caller-recycled buffer, in start order), unpinning each.
+    pub fn finish_batch(&mut self, now: Micros, out: &mut Vec<QTask>) {
+        debug_assert!(!self.running.is_empty(), "finish without running");
+        for qt in self.running.drain(..) {
+            if let Some(m) = qt.model {
+                self.gpu.unpin(m);
+            }
+            out.push(qt);
+        }
+        self.busy.stop(now);
     }
 
     /// Sample the actual runtime for a new task instance around `base` µs.
@@ -123,16 +221,34 @@ impl SimWorker {
     }
 
     /// FT(w): absolute time at which everything currently here finishes
-    /// (running task remainder + all queued runtimes), §4.1.
-    pub fn ft_estimate(&self, now: Micros) -> Micros {
-        let base = if self.running.is_some() { self.exec_end.max(now) } else { now };
-        base + self.queue.iter().map(|q| q.runtime_us).sum::<Micros>()
+    /// (running remainder + queue drain), §4.1. With batching off this is
+    /// the plain runtime sum; with batching on, queued runtimes are grouped
+    /// by model and drained through the coalescing cost curve, so peers see
+    /// the shorter finish times batch-friendly queues actually achieve.
+    pub fn ft_estimate(&self, now: Micros, batch: &BatchConfig) -> Micros {
+        let base = if !self.running.is_empty() { self.exec_end.max(now) } else { now };
+        if !batch.enabled() {
+            return base + self.queued_runtime_us;
+        }
+        let mut modeled_sum: Micros = 0;
+        let mut drain: Micros = 0;
+        for m in 0..N_MODELS {
+            let count = self.queued_count[m] as usize;
+            if count == 0 {
+                continue;
+            }
+            let sum = self.queued_sum_us[m];
+            modeled_sum += sum;
+            drain += batch.drain_estimate_us(count, sum, batch.alpha(batch_alpha(m as ModelId)));
+        }
+        // Model-less tasks (pre/post-processing vertices) never batch.
+        base + drain + (self.queued_runtime_us - modeled_sum)
     }
 
     /// The worker's own live SST row (always current for itself).
-    pub fn live_row(&self, now: Micros) -> SstRow {
+    pub fn live_row(&self, now: Micros, batch: &BatchConfig) -> SstRow {
         SstRow {
-            ft_us: self.ft_estimate(now),
+            ft_us: self.ft_estimate(now, batch),
             cache_bitmap: self.gpu.bitmap(),
             free_cache_bytes: self.gpu.free_bytes(),
             load_pushed_at: now,
@@ -169,12 +285,16 @@ mod tests {
         QTask { job_idx: 0, task, model, runtime_us: rt, caused_fetch: false }
     }
 
+    fn off() -> BatchConfig {
+        BatchConfig::default()
+    }
+
     #[test]
     fn ft_estimate_sums_queue() {
         let mut w = worker();
         w.enqueue(qt(0, None, 100 * MS));
         w.enqueue(qt(1, None, 50 * MS));
-        assert_eq!(w.ft_estimate(1000), 1000 + 150 * MS);
+        assert_eq!(w.ft_estimate(1000, &off()), 1000 + 150 * MS);
     }
 
     #[test]
@@ -184,7 +304,42 @@ mod tests {
         w.start_task(0, 0, 100 * MS);
         w.enqueue(qt(1, None, 50 * MS));
         // At t=30ms: running until 100ms, then 50ms queued.
-        assert_eq!(w.ft_estimate(30 * MS), 150 * MS);
+        assert_eq!(w.ft_estimate(30 * MS, &off()), 150 * MS);
+    }
+
+    #[test]
+    fn ft_incremental_sum_tracks_dequeues() {
+        let mut w = worker();
+        w.enqueue(qt(0, Some(0), 10 * MS));
+        w.enqueue(qt(1, None, 20 * MS));
+        w.enqueue(qt(2, Some(0), 30 * MS));
+        w.start_task(1, 0, 20 * MS); // pop the middle entry
+        assert_eq!(w.ft_estimate(0, &off()), 20 * MS + 40 * MS);
+        w.finish_task(20 * MS);
+        assert_eq!(w.ft_estimate(20 * MS, &off()), 20 * MS + 40 * MS);
+    }
+
+    #[test]
+    fn ft_estimate_discounts_batchable_queue() {
+        use crate::dfg::models::DETR;
+        let batch = BatchConfig { batch_max: 4, ..Default::default() };
+        let mut w = worker();
+        for t in 0..4 {
+            w.enqueue(qt(t, Some(DETR), 10 * MS));
+        }
+        // alpha(detr)=0.5: one batch of 4 → 0.5·10 + 0.5·40 = 25 ms.
+        assert_eq!(w.ft_estimate(0, &batch), 25 * MS);
+        // Same queue without batching drains serially.
+        assert_eq!(w.ft_estimate(0, &off()), 40 * MS);
+    }
+
+    #[test]
+    fn ft_estimate_modelless_tasks_never_discounted() {
+        let batch = BatchConfig { batch_max: 8, ..Default::default() };
+        let mut w = worker();
+        w.enqueue(qt(0, None, 10 * MS));
+        w.enqueue(qt(1, None, 10 * MS));
+        assert_eq!(w.ft_estimate(0, &batch), 20 * MS);
     }
 
     #[test]
@@ -201,11 +356,56 @@ mod tests {
     }
 
     #[test]
+    fn batch_roundtrip_pins_and_drains_in_order() {
+        use crate::dfg::models::OPT;
+        let mut w = worker();
+        w.gpu.insert(OPT, 0);
+        for t in 0..3 {
+            w.enqueue(qt(t, Some(OPT), 10 * MS));
+        }
+        w.start_batch(&[0, 1, 2], 0, 20 * MS);
+        assert_eq!(w.running_batch().len(), 3);
+        assert_eq!(w.queue().len(), 0);
+        // All three members hold pins.
+        assert!(w.gpu.plan_eviction(w.gpu.capacity(), &[]).is_none());
+        let mut out = Vec::new();
+        w.finish_batch(20 * MS, &mut out);
+        assert_eq!(out.iter().map(|q| q.task).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(w.running().is_none());
+        // Fully unpinned again: eviction may now plan against OPT.
+        assert!(w.gpu.plan_eviction(w.gpu.capacity(), &[]).is_some());
+    }
+
+    #[test]
+    fn queue_models_dedups_first_appearance() {
+        use crate::dfg::models::{BART, DETR, OPT};
+        let mut w = worker();
+        w.enqueue(qt(0, Some(DETR), MS));
+        w.enqueue(qt(1, Some(OPT), MS));
+        w.enqueue(qt(2, Some(DETR), MS));
+        w.enqueue(qt(3, None, MS));
+        w.enqueue(qt(4, Some(BART), MS));
+        let mut out = Vec::new();
+        w.queue_models_into(&mut out);
+        assert_eq!(out, vec![DETR, OPT, BART]);
+    }
+
+    #[test]
+    fn hold_set_and_cleared_on_start() {
+        let mut w = worker();
+        w.enqueue(qt(0, Some(0), 10 * MS));
+        w.set_hold(500);
+        assert_eq!(w.hold_until(), Some(500));
+        w.start_batch(&[0], 600, 10 * MS + 600);
+        assert_eq!(w.hold_until(), None);
+    }
+
+    #[test]
     fn live_row_reflects_cache() {
         use crate::dfg::models::BART;
         let mut w = worker();
         w.gpu.insert(BART, 0);
-        let row = w.live_row(5);
+        let row = w.live_row(5, &off());
         assert_eq!(row.cache_bitmap, 1 << BART);
         assert_eq!(row.ft_us, 5);
     }

@@ -1,0 +1,171 @@
+//! Property tests on the execute-path batching invariants: `batch_max = 1`
+//! is bit-identical to the unbatched simulator, formed batches never mix
+//! models or exceed `batch_max`, every batch member completes exactly at
+//! the batch end instant, and every scheduler still completes all jobs
+//! with batching on — driven by the in-tree harness (`util::prop`).
+
+use std::collections::HashMap;
+
+use compass::config::{ClusterConfig, SchedulerKind};
+use compass::core::{JobId, Micros, ModelId};
+use compass::dfg::pipelines;
+use compass::net::CostModel;
+use compass::obs::TraceEvent;
+use compass::util::prop::check;
+use compass::{workload, Simulator};
+
+/// `batch_max = 1` — whatever the window or alpha override — must leave
+/// every observable of the simulation untouched, down to the bit.
+#[test]
+fn prop_batch_max_one_is_bit_identical_to_unbatched() {
+    check("batching-off-identity", 21, |rng| {
+        let n_jobs = 10 + rng.below(30) as usize;
+        let rate = 0.5 + rng.f64() * 4.0;
+        let kind = SchedulerKind::ALL[rng.below(4) as usize];
+        let n_workers = 2 + rng.below(8) as usize;
+        let seed = rng.next_u64();
+        let jobs = workload::poisson(rate, n_jobs, &[], seed ^ 1);
+
+        let base = ClusterConfig::default()
+            .with_scheduler(kind)
+            .with_workers(n_workers)
+            .with_seed(seed);
+        let mut off = base.clone().with_batching(1, rng.below(5_000));
+        off.cost.batch.alpha_override = Some(rng.f64());
+
+        let a = Simulator::simulate(base, jobs.clone());
+        let b = Simulator::simulate(off, jobs);
+        if a.events_processed != b.events_processed {
+            return Err(format!(
+                "event counts diverged: {} vs {}",
+                a.events_processed, b.events_processed
+            ));
+        }
+        if a.sim_span_us != b.sim_span_us {
+            return Err("sim span diverged".into());
+        }
+        let la: Vec<Micros> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<Micros> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        if la != lb {
+            return Err("per-job latencies diverged".into());
+        }
+        // Derived f64 aggregates must match bit-for-bit, not just approximately.
+        if a.metrics.mean_latency_s().to_bits() != b.metrics.mean_latency_s().to_bits()
+            || a.metrics.mean_slowdown().to_bits() != b.metrics.mean_slowdown().to_bits()
+        {
+            return Err("f64 aggregates not bit-identical".into());
+        }
+        Ok(())
+    });
+}
+
+/// Trace-level batching invariants. The worker is serial, so all the
+/// `ExecStart` events sharing one `(worker, t)` are exactly one dispatch —
+/// a batch (or a solo start). Checks: no group exceeds `batch_max`, no
+/// multi-member group mixes models (or contains a model-less glue task),
+/// each `BatchExecuted` retires exactly `size` members at its instant, and
+/// batch completions account for every `ExecEnd` in the run.
+#[test]
+fn prop_batches_never_mix_models_and_retire_together() {
+    check("batching-trace-invariants", 22, |rng| {
+        let batch_max = 2 + rng.below(7) as usize; // 2..=8
+        let window: Micros = rng.below(3_000);
+        let n_jobs = 20 + rng.below(40) as usize;
+        let rate = 2.0 + rng.f64() * 4.0;
+        let seed = rng.next_u64();
+        // Same-model-heavy (VPA-only) stream: the regime that forms batches.
+        let jobs = workload::poisson(rate, n_jobs, &[0.0, 0.0, 1.0, 0.0], seed ^ 1);
+        let mut cfg = ClusterConfig::default().with_seed(seed).with_batching(batch_max, window);
+        cfg.trace.enabled = true;
+        let rep = Simulator::simulate(cfg, jobs);
+        if rep.metrics.incomplete != 0 {
+            return Err(format!("{} jobs incomplete under batching", rep.metrics.incomplete));
+        }
+        if rep.trace.dropped != 0 {
+            return Err("trace ring overflowed; invariants unverifiable".into());
+        }
+
+        let cost = CostModel::default();
+        let mut kind_of = HashMap::new();
+        for ev in &rep.trace.events {
+            if let TraceEvent::JobArrive { job, kind, .. } = *ev {
+                kind_of.insert(job, kind);
+            }
+        }
+        let model_of = |job: JobId, task: u16| -> Result<Option<ModelId>, String> {
+            let kind = kind_of.get(&job).ok_or("ExecStart for job without JobArrive")?;
+            Ok(pipelines::by_kind(*kind, &cost).vertices[task as usize].model)
+        };
+
+        let mut groups: HashMap<(u16, Micros), Vec<(JobId, u16)>> = HashMap::new();
+        for ev in &rep.trace.events {
+            if let TraceEvent::ExecStart { job, task, worker, t } = *ev {
+                groups.entry((worker, t)).or_default().push((job, task));
+            }
+        }
+        for members in groups.values() {
+            if members.len() > batch_max {
+                return Err(format!(
+                    "dispatch of {} members exceeds batch_max {batch_max}",
+                    members.len()
+                ));
+            }
+            if members.len() > 1 {
+                let m0 = model_of(members[0].0, members[0].1)?;
+                if m0.is_none() {
+                    return Err("model-less task coalesced into a batch".into());
+                }
+                for &(j, task) in members {
+                    if model_of(j, task)? != m0 {
+                        return Err("batch mixes models".into());
+                    }
+                }
+            }
+        }
+
+        let mut ends: HashMap<(u16, Micros), usize> = HashMap::new();
+        for ev in &rep.trace.events {
+            if let TraceEvent::ExecEnd { worker, t, .. } = *ev {
+                *ends.entry((worker, t)).or_default() += 1;
+            }
+        }
+        let mut batched = 0usize;
+        for ev in &rep.trace.events {
+            if let TraceEvent::BatchExecuted { worker, size, t, .. } = *ev {
+                batched += size as usize;
+                let got = ends.get(&(worker, t)).copied().unwrap_or(0);
+                if got != size as usize {
+                    return Err(format!(
+                        "batch of {size} on worker {worker} retired {got} members at t={t}"
+                    ));
+                }
+            }
+        }
+        // With batching on, every execution completes through the batch
+        // path, so batch sizes must account for every ExecEnd.
+        let total_ends: usize = ends.values().sum();
+        if batched != total_ends {
+            return Err(format!("{batched} batched completions vs {total_ends} ExecEnds"));
+        }
+        Ok(())
+    });
+}
+
+/// Batching must not wedge any scheduler: random `batch_max`/window over
+/// the standard 4-pipeline mix, every job still completes.
+#[test]
+fn prop_all_schedulers_complete_under_batching() {
+    check("batching-all-schedulers", 23, |rng| {
+        let kind = SchedulerKind::ALL[rng.below(4) as usize];
+        let cfg = ClusterConfig::default()
+            .with_scheduler(kind)
+            .with_seed(rng.next_u64())
+            .with_batching(2 + rng.below(7) as usize, rng.below(3_000));
+        let jobs = workload::poisson(2.0, 25, &[], rng.next_u64());
+        let m = Simulator::simulate(cfg, jobs).metrics;
+        if m.jobs.len() != 25 {
+            return Err(format!("{} of 25 jobs completed under batching", m.jobs.len()));
+        }
+        Ok(())
+    });
+}
