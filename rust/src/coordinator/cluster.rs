@@ -7,6 +7,7 @@
 //! model through PJRT. This is the system `exp::validate` compares against
 //! the simulator, reproducing the paper's §5.4 validation.
 
+use super::lock_recover;
 use super::network::{run_fabric, Parcel};
 use crate::config::ClusterConfig;
 use crate::core::{hash_pair, Micros, ModelId, TaskId, WorkerId};
@@ -101,7 +102,7 @@ struct Shared {
 impl Shared {
     /// Profiled-time "now" in µs.
     fn now(&self) -> Micros {
-        let epoch = *self.epoch.lock().unwrap();
+        let epoch = *lock_recover(&self.epoch);
         (epoch.elapsed().as_micros() as f64 * self.live.time_scale) as Micros
     }
 
@@ -119,7 +120,7 @@ impl Shared {
     /// Record a trace event: one branch and no lock when tracing is off.
     fn trace(&self, ev: TraceEvent) {
         if self.cfg.trace.enabled {
-            self.tracer.lock().unwrap().record(ev);
+            lock_recover(&self.tracer).record(ev);
         }
     }
 }
@@ -192,14 +193,14 @@ impl WorkerNode {
 
     fn push_sst(&self, now: Micros) {
         let row = self.live_row(now);
-        let mut sst = self.shared.sst.lock().unwrap();
+        let mut sst = lock_recover(&self.shared.sst);
         sst.push_load(self.id, row.ft_us, now);
         sst.push_cache(self.id, row.cache_bitmap, row.free_cache_bytes, now);
     }
 
     /// Copy published rows, refreshing our own row live.
     fn view_rows(&self, now: Micros) -> Vec<SstRow> {
-        let mut rows = self.shared.sst.lock().unwrap().rows().to_vec();
+        let mut rows = lock_recover(&self.shared.sst).rows().to_vec();
         rows[self.id] = self.live_row(now);
         rows
     }
@@ -211,7 +212,7 @@ impl WorkerNode {
         let rows = self.view_rows(now);
         let mut probe =
             if sh.cfg.trace.enabled { DecisionProbe::on() } else { DecisionProbe::off() };
-        let mut jobs = sh.jobs.lock().unwrap();
+        let mut jobs = lock_recover(&sh.jobs);
         let (target, pred_outputs) = {
             let js = &jobs[job_idx];
             let dfg = &sh.dfgs[js.job.kind.index()];
@@ -324,7 +325,7 @@ impl WorkerNode {
     fn dispatch(&mut self, force_start: bool) {
         let sh = self.shared.clone();
         let now = sh.now();
-        let jobs = sh.jobs.lock().unwrap();
+        let jobs = lock_recover(&sh.jobs);
 
         // Fetch scan (PCIe serial; overlaps execution).
         if self.fetching.is_none() {
@@ -451,7 +452,7 @@ impl WorkerNode {
                 self.exec_end = exec_start + delay;
                 self.running.push(qt);
                 if sh.cfg.trace.enabled {
-                    let job = sh.jobs.lock().unwrap()[job_idx].job.id;
+                    let job = lock_recover(&sh.jobs)[job_idx].job.id;
                     sh.trace(TraceEvent::ExecStart {
                         job,
                         task: task as u16,
@@ -500,7 +501,7 @@ impl WorkerNode {
             t: exec_start,
         });
         if sh.cfg.trace.enabled {
-            let jobs = sh.jobs.lock().unwrap();
+            let jobs = lock_recover(&sh.jobs);
             for qt in &self.running {
                 sh.trace(TraceEvent::ExecStart {
                     job: jobs[qt.job_idx].job.id,
@@ -552,7 +553,7 @@ impl WorkerNode {
     fn retire_task(&mut self, job_idx: usize, task: TaskId, now: Micros) {
         let sh = self.shared.clone();
         let (exit, succs, dfg_idx, job_id) = {
-            let jobs = sh.jobs.lock().unwrap();
+            let jobs = lock_recover(&sh.jobs);
             let js = &jobs[job_idx];
             let dfg_idx = js.job.kind.index();
             let d = &sh.dfgs[dfg_idx];
@@ -565,12 +566,12 @@ impl WorkerNode {
             t: now,
         });
         {
-            let mut jobs = sh.jobs.lock().unwrap();
+            let mut jobs = lock_recover(&sh.jobs);
             jobs[job_idx].output_worker[task] = Some(self.id);
         }
 
         if task == exit {
-            let jobs = sh.jobs.lock().unwrap();
+            let jobs = lock_recover(&sh.jobs);
             let js = &jobs[job_idx];
             sh.trace(TraceEvent::JobComplete {
                 job: js.job.id,
@@ -588,7 +589,7 @@ impl WorkerNode {
 
         for (slot, &s) in succs.iter().enumerate() {
             let ready = {
-                let mut jobs = sh.jobs.lock().unwrap();
+                let mut jobs = lock_recover(&sh.jobs);
                 jobs[job_idx].remaining_preds[s] -= 1;
                 jobs[job_idx].remaining_preds[s] == 0
             };
@@ -596,7 +597,7 @@ impl WorkerNode {
                 self.assign_and_dispatch(job_idx, s);
             } else {
                 // Join early-send when the placement is pre-coordinated.
-                let mut jobs = sh.jobs.lock().unwrap();
+                let mut jobs = lock_recover(&sh.jobs);
                 let dfg = &sh.dfgs[dfg_idx];
                 if dfg.is_join(s) {
                     if let Some(target) = jobs[job_idx].adfg.get(s) {
@@ -619,12 +620,12 @@ impl WorkerNode {
         let traced = sh.cfg.trace.enabled;
         if traced {
             let (id, kind) = {
-                let jobs = sh.jobs.lock().unwrap();
+                let jobs = lock_recover(&sh.jobs);
                 (jobs[job_idx].job.id, jobs[job_idx].job.kind)
             };
             sh.trace(TraceEvent::JobArrive { job: id, kind, t: now });
             // Sample how stale the SST view feeding this plan was (§5.2).
-            let sst = sh.sst.lock().unwrap();
+            let sst = lock_recover(&sh.sst);
             for w in 0..sh.cfg.n_workers {
                 let (load, cache) = sst.staleness_of(w, now);
                 sh.trace(TraceEvent::SstStaleness {
@@ -637,7 +638,7 @@ impl WorkerNode {
         }
         let mut probe = if traced { DecisionProbe::on() } else { DecisionProbe::off() };
         let (entry, adfg) = {
-            let jobs = sh.jobs.lock().unwrap();
+            let jobs = lock_recover(&sh.jobs);
             let js = &jobs[job_idx];
             let dfg = &sh.dfgs[js.job.kind.index()];
             let view = ClusterView {
@@ -651,7 +652,7 @@ impl WorkerNode {
             (dfg.entry, sh.scheduler.plan_probed(&js.job, dfg, &view, &mut probe))
         };
         if probe.is_active() {
-            let job = sh.jobs.lock().unwrap()[job_idx].job.id;
+            let job = lock_recover(&sh.jobs)[job_idx].job.id;
             for (task, candidates) in probe.take_records() {
                 let chosen = adfg.get(task).unwrap_or(self.id);
                 sh.trace(TraceEvent::Decision {
@@ -665,14 +666,14 @@ impl WorkerNode {
                 });
             }
         }
-        sh.jobs.lock().unwrap()[job_idx].adfg = adfg;
+        lock_recover(&sh.jobs)[job_idx].adfg = adfg;
         self.assign_and_dispatch(job_idx, entry);
     }
 
     fn handle_enqueue(&mut self, job_idx: usize, task: TaskId) {
         let sh = self.shared.clone();
         let (base, model) = {
-            let jobs = sh.jobs.lock().unwrap();
+            let jobs = lock_recover(&sh.jobs);
             let dfg = &sh.dfgs[jobs[job_idx].job.kind.index()];
             (
                 (dfg.vertices[task].mean_runtime_us as f64 * sh.speed[self.id]).max(1.0),
@@ -682,7 +683,7 @@ impl WorkerNode {
         let runtime = self.rng.jitter(base, sh.cfg.runtime_jitter, 100.0) as Micros;
         self.queue.push(QTask { job_idx, task, model, runtime_us: runtime, caused_fetch: false });
         if sh.cfg.trace.enabled {
-            let job = sh.jobs.lock().unwrap()[job_idx].job.id;
+            let job = lock_recover(&sh.jobs)[job_idx].job.id;
             sh.trace(TraceEvent::TaskEnqueue {
                 job,
                 task: task as u16,
@@ -719,7 +720,7 @@ impl WorkerNode {
                 Ok(Msg::Job { job_idx }) => self.handle_job(job_idx),
                 Ok(Msg::Enqueue { job_idx, task }) => self.handle_enqueue(job_idx, task),
                 Ok(Msg::Input { job_idx, task }) => {
-                    self.shared.jobs.lock().unwrap()[job_idx].inputs_arrived[task] += 1;
+                    lock_recover(&self.shared.jobs)[job_idx].inputs_arrived[task] += 1;
                     self.try_dispatch();
                 }
                 Ok(Msg::FetchDone { model }) => {
@@ -753,7 +754,7 @@ impl WorkerNode {
         // Hand this worker's cache event log to the shared tracer.
         if self.shared.cfg.trace.enabled {
             let events = self.gpu.drain_log();
-            let mut tr = self.shared.tracer.lock().unwrap();
+            let mut tr = lock_recover(&self.shared.tracer);
             let worker = self.id as u16;
             for ev in events {
                 let (model, free_bytes, t) = (ev.model, ev.free_bytes, ev.at_us);
@@ -899,7 +900,7 @@ impl LiveCluster {
                 .recv_timeout(live.wall_timeout)
                 .map_err(|_| anyhow::anyhow!("worker failed to become ready"))?;
         }
-        *shared.epoch.lock().unwrap() = Instant::now();
+        *lock_recover(&shared.epoch) = Instant::now();
 
         // Client: replay arrivals on the scaled clock.
         {
@@ -908,12 +909,12 @@ impl LiveCluster {
                 // Collect arrivals FIRST: holding the jobs lock across the
                 // pacing sleeps below would stall every worker.
                 let arrivals: Vec<Micros> = {
-                    let jobs = sh.jobs.lock().unwrap();
+                    let jobs = lock_recover(&sh.jobs);
                     jobs.iter().map(|j| j.job.arrival_us).collect()
                 };
                 for (idx, arrival) in arrivals.into_iter().enumerate() {
                     let due = sh.to_wall(arrival);
-                    let elapsed = sh.epoch.lock().unwrap().elapsed();
+                    let elapsed = lock_recover(&sh.epoch).elapsed();
                     if due > elapsed {
                         std::thread::sleep(due - elapsed);
                     }
@@ -945,13 +946,23 @@ impl LiveCluster {
         for w in 0..n_workers {
             shared.send(w, 0, Msg::Stop);
         }
-        let worker_metrics: Vec<WorkerMetrics> =
-            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+        let worker_metrics: Vec<WorkerMetrics> = handles
+            .into_iter()
+            .enumerate()
+            .map(|(w, h)| {
+                h.join().unwrap_or_else(|_| {
+                    eprintln!(
+                        "coordinator: worker {w} thread panicked; reporting empty metrics for it"
+                    );
+                    WorkerMetrics::default()
+                })
+            })
+            .collect();
         let pjrt_executions = shared.pjrt_execs.load(Ordering::Relaxed);
         let pjrt_ns = shared.pjrt_exec_ns.load(Ordering::Relaxed);
         // All workers have joined (and drained their cache logs): the trace
         // is complete.
-        let trace = shared.tracer.lock().unwrap().take();
+        let trace = lock_recover(&shared.tracer).take();
         drop(net_tx);
         drop(shared);
         let _ = fabric.join();

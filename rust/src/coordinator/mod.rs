@@ -23,6 +23,34 @@ mod network;
 pub use cluster::{LiveCluster, LiveConfig, LiveReport};
 
 use crate::util::args::Args;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Logged once when a poisoned lock is first recovered, so a crashed
+/// worker thread shows up in stderr without spamming every subsequent
+/// lock acquisition.
+static POISON_SEEN: AtomicBool = AtomicBool::new(false);
+
+/// Acquire `m`, recovering from lock poisoning instead of panicking
+/// (lint rule L3: the live path must degrade, not die). A mutex is
+/// poisoned only when a thread panicked while holding it; the protected
+/// state (SST rows, job tables, tracer ring) stays structurally valid for
+/// every operation the coordinator performs, so continuing with the
+/// recovered guard is safe — the run's *numbers* may be off, which the
+/// one-shot stderr note makes visible.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            if !POISON_SEEN.swap(true, Ordering::Relaxed) {
+                eprintln!(
+                    "coordinator: lock poisoned by a crashed worker thread; continuing with recovered state"
+                );
+            }
+            poisoned.into_inner()
+        }
+    }
+}
 
 /// `compass serve` CLI: run the live coordinator on a Poisson workload.
 pub fn cli_serve(args: &Args) -> anyhow::Result<()> {

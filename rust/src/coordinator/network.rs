@@ -79,11 +79,11 @@ pub fn run_fabric<M: Send + 'static>(
         }
         // Deliver everything due.
         while let Some(Reverse(p)) = heap.peek() {
-            if p.at <= Instant::now() {
-                let Reverse(p) = heap.pop().unwrap();
-                let _ = outs[p.to].send(p.msg);
-            } else {
+            if p.at > Instant::now() {
                 break;
+            }
+            if let Some(Reverse(p)) = heap.pop() {
+                let _ = outs[p.to].send(p.msg);
             }
         }
     }

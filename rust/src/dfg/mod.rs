@@ -230,10 +230,7 @@ impl Dfg {
     fn compute_rank_order(&self) -> Vec<TaskId> {
         let mut ids: Vec<TaskId> = (0..self.len()).collect();
         ids.sort_by(|&a, &b| {
-            self.ranks[b]
-                .partial_cmp(&self.ranks[a])
-                .unwrap()
-                .then(a.cmp(&b))
+            crate::util::stats::cmp_f64(self.ranks[b], self.ranks[a]).then(a.cmp(&b))
         });
         ids
     }

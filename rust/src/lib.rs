@@ -18,6 +18,7 @@ pub mod core;
 pub mod dfg;
 pub mod exp;
 pub mod gpu;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod obs;

@@ -1,0 +1,180 @@
+//! `compass-lint`: a self-hosted, std-only static analysis pass over the
+//! crate's own sources. It enforces the repo invariants every headline
+//! result depends on (DESIGN.md §8): simulator determinism, hot-path
+//! allocation freedom, live-path panic hygiene, exporter exhaustiveness,
+//! and total-order float comparison. Run it with `compass lint`; CI runs
+//! it as a required gate.
+//!
+//! | code | rule                  | scope                         |
+//! |------|-----------------------|-------------------------------|
+//! | L1   | determinism           | `sim/ sched/ exp/ obs/`       |
+//! | L2   | hot-path allocation   | `// lint: hot-path` fences    |
+//! | L3   | panic hygiene         | `coordinator/`                |
+//! | L4   | exporter exhaustive   | `obs/mod.rs` vs exporters     |
+//! | L5   | float ordering        | all of `src/`                 |
+//!
+//! The engine is two layers: [`scan`] tokenizes (skipping comments,
+//! strings, and `#[cfg(test)]` regions, capturing `// lint:` directives)
+//! and [`rules`] matches token patterns per rule. Everything operates on
+//! `(path, source)` pairs, so fixture tests can lint virtual files.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{Finding, Rule};
+
+use std::path::{Path, PathBuf};
+
+/// Result of linting a tree (or a set of virtual files).
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable findings, one `file:line [Lx] message` per line,
+    /// plus a summary tail.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule.code(), f.message));
+        }
+        s.push_str(&format!(
+            "compass-lint: {} finding(s) across {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        s
+    }
+
+    /// Machine-readable JSON report (same shape the CI gate archives).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::escape;
+        let mut s = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                escape(&f.file),
+                f.line,
+                f.rule.code(),
+                escape(&f.message)
+            ));
+        }
+        if !self.findings.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str(&format!(
+            "],\n  \"files_scanned\": {},\n  \"clean\": {}\n}}\n",
+            self.files_scanned,
+            self.clean()
+        ));
+        s
+    }
+}
+
+/// Lint a set of `(src-relative path, source)` pairs. Paths use `/`
+/// separators and are relative to `src/` (e.g. `sim/queue.rs`), which is
+/// what scopes the per-directory rules. This is the engine entry point
+/// the fixture tests drive directly.
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Finding> {
+    let scanned: Vec<(String, scan::Scanned)> =
+        files.iter().map(|(p, src)| (p.clone(), scan::scan(src))).collect();
+    let mut findings = Vec::new();
+    for (path, sc) in &scanned {
+        let ctx = rules::FileCtx::new(path, sc, &mut findings);
+        rules::l1_determinism(&ctx, &mut findings);
+        rules::l2_hot_path(&ctx, &mut findings);
+        rules::l3_panic_hygiene(&ctx, &mut findings);
+        rules::l5_float_ordering(&ctx, &mut findings);
+    }
+    rules::l4_exporters(&scanned, &mut findings);
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    findings.dedup();
+    findings
+}
+
+/// Lint every `.rs` file under `root` (normally the crate's `src/`).
+pub fn lint_tree(root: &Path) -> anyhow::Result<Report> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", p.display()))?;
+        files.push((rel, src));
+    }
+    let findings = lint_sources(&files);
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension() == Some(std::ffi::OsStr::new("rs")) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn findings_are_sorted_and_deduped() {
+        let files = vec![(
+            "sim/a.rs".to_string(),
+            "use std::collections::{HashMap, HashMap};\nuse std::collections::HashSet;\n"
+                .to_string(),
+        )];
+        let f = lint_sources(&files);
+        // Two HashMap mentions on line 1 dedup to one finding; HashSet on
+        // line 2 stays.
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[1].line, 2);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let files =
+            vec![("obs/a.rs".to_string(), "use std::collections::HashMap;\n".to_string())];
+        let findings = lint_sources(&files);
+        let rep = Report { findings, files_scanned: 1 };
+        let text = rep.render();
+        assert!(text.contains("obs/a.rs:1 [L1]"));
+        assert!(text.contains("1 finding(s) across 1 file(s)"));
+        let json = rep.to_json();
+        assert!(json.contains("\"rule\": \"L1\""));
+        assert!(json.contains("\"clean\": false"));
+    }
+
+    #[test]
+    fn empty_report_is_clean_json() {
+        let rep = Report { findings: Vec::new(), files_scanned: 3 };
+        assert!(rep.clean());
+        assert!(rep.to_json().contains("\"clean\": true"));
+    }
+}

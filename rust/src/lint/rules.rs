@@ -1,0 +1,503 @@
+//! Rule matchers for `compass-lint`. Each rule walks the token stream of
+//! one file (or, for L4, cross-references several files) and appends
+//! [`Finding`]s. Scoping, `#[cfg(test)]` exemption, fences, and waivers
+//! are resolved here; tokenization lives in [`super::scan`].
+
+use super::scan::{in_ranges, Directive, Scanned, Tok};
+
+/// The rule catalog. Codes match DESIGN.md §8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// L1: determinism — no wall clocks / order-dependent maps in
+    /// `sim/`, `sched/`, `exp/`, `obs/`.
+    Determinism,
+    /// L2: no allocation inside `// lint: hot-path` fences.
+    HotPathAlloc,
+    /// L3: no `unwrap`/`expect` on channel/lock results in `coordinator/`.
+    PanicHygiene,
+    /// L4: every `obs::TraceEvent` variant handled by both exporters.
+    ExporterExhaustive,
+    /// L5: float comparisons go through the canonical tie-break helper.
+    FloatOrdering,
+}
+
+impl Rule {
+    pub fn code(self) -> &'static str {
+        match self {
+            Rule::Determinism => "L1",
+            Rule::HotPathAlloc => "L2",
+            Rule::PanicHygiene => "L3",
+            Rule::ExporterExhaustive => "L4",
+            Rule::FloatOrdering => "L5",
+        }
+    }
+}
+
+/// One lint finding, pointing at a source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// Per-file context shared by the rule matchers.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    pub scanned: &'a Scanned,
+    /// `#[cfg(test)]` line ranges — findings inside are dropped.
+    pub tests: Vec<(u32, u32)>,
+    /// `// lint: hot-path` .. `// lint: end-hot-path` line ranges.
+    pub fences: Vec<(u32, u32)>,
+}
+
+impl<'a> FileCtx<'a> {
+    pub fn new(path: &'a str, scanned: &'a Scanned, findings: &mut Vec<Finding>) -> FileCtx<'a> {
+        let tests = super::scan::test_ranges(&scanned.toks);
+        let fences = fence_ranges(path, &scanned.directives, findings);
+        FileCtx { path, scanned, tests, fences }
+    }
+
+    /// First path component (`sim`, `sched`, `coordinator`, ...) of the
+    /// src-relative path; top-level files map to "".
+    pub fn top_dir(&self) -> &str {
+        match self.path.find('/') {
+            Some(k) => &self.path[..k],
+            None => "",
+        }
+    }
+
+    fn in_tests(&self, line: u32) -> bool {
+        in_ranges(&self.tests, line)
+    }
+
+    fn in_fence(&self, line: u32) -> bool {
+        in_ranges(&self.fences, line)
+    }
+
+    /// A waiver directive suppresses a finding when it sits on the same
+    /// line or the line immediately above.
+    fn waived(&self, line: u32, waiver: &str) -> bool {
+        self.scanned
+            .directives
+            .iter()
+            .any(|d| d.text == waiver && (d.line == line || d.line + 1 == line))
+    }
+
+    fn push(&self, out: &mut Vec<Finding>, line: u32, rule: Rule, msg: String) {
+        out.push(Finding { file: self.path.to_string(), line, rule, message: msg });
+    }
+}
+
+/// Known waiver directives; anything else after `lint:` is itself a
+/// finding (typos must not silently disable enforcement).
+const KNOWN_WAIVERS: [&str; 5] = ["sorted", "wall-clock", "alloc-ok", "may-panic", "total-order"];
+
+/// Build `hot-path` fence ranges from directives, flagging unmatched or
+/// unknown directives as findings.
+pub fn fence_ranges(
+    path: &str,
+    directives: &[Directive],
+    findings: &mut Vec<Finding>,
+) -> Vec<(u32, u32)> {
+    let mut fences = Vec::new();
+    let mut open: Option<u32> = None;
+    for d in directives {
+        match d.text.as_str() {
+            "hot-path" => {
+                if let Some(start) = open {
+                    findings.push(Finding {
+                        file: path.to_string(),
+                        line: d.line,
+                        rule: Rule::HotPathAlloc,
+                        message: format!(
+                            "nested `lint: hot-path` (previous fence opened on line {start} is still open)"
+                        ),
+                    });
+                } else {
+                    open = Some(d.line);
+                }
+            }
+            "end-hot-path" => match open.take() {
+                Some(start) => fences.push((start, d.line)),
+                None => findings.push(Finding {
+                    file: path.to_string(),
+                    line: d.line,
+                    rule: Rule::HotPathAlloc,
+                    message: "`lint: end-hot-path` without a matching `lint: hot-path`".to_string(),
+                }),
+            },
+            other if KNOWN_WAIVERS.contains(&other) => {}
+            other => findings.push(Finding {
+                file: path.to_string(),
+                line: d.line,
+                rule: Rule::HotPathAlloc,
+                message: format!("unknown lint directive `{other}`"),
+            }),
+        }
+    }
+    if let Some(start) = open {
+        findings.push(Finding {
+            file: path.to_string(),
+            line: start,
+            rule: Rule::HotPathAlloc,
+            message: "`lint: hot-path` fence is never closed".to_string(),
+        });
+    }
+    fences
+}
+
+/// L1 determinism: applies to `sim/`, `sched/`, `exp/`, `obs/`.
+pub fn l1_determinism(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !matches!(ctx.top_dir(), "sim" | "sched" | "exp" | "obs") {
+        return;
+    }
+    for t in &ctx.scanned.toks {
+        if ctx.in_tests(t.line) {
+            continue;
+        }
+        let (msg, waiver) = match t.text.as_str() {
+            "Instant" | "SystemTime" => (
+                format!("wall-clock source `{}` in deterministic code (waive with `// lint: wall-clock`)", t.text),
+                "wall-clock",
+            ),
+            "thread_rng" => (
+                "non-deterministic RNG `thread_rng` in deterministic code (waive with `// lint: wall-clock`)".to_string(),
+                "wall-clock",
+            ),
+            "HashMap" | "HashSet" => (
+                format!(
+                    "order-dependent `{}` in deterministic code — use BTreeMap/BTreeSet or waive with `// lint: sorted`",
+                    t.text
+                ),
+                "sorted",
+            ),
+            _ => continue,
+        };
+        if !ctx.waived(t.line, waiver) {
+            ctx.push(out, t.line, Rule::Determinism, msg);
+        }
+    }
+}
+
+/// Method names banned after `.` inside a hot-path fence.
+const L2_METHODS: [&str; 5] = ["clone", "collect", "to_vec", "to_owned", "to_string"];
+/// Constructors banned as `Type::ctor` inside a hot-path fence.
+const L2_TYPES: [&str; 3] = ["Vec", "String", "Box"];
+const L2_CTORS: [&str; 2] = ["new", "with_capacity"];
+
+/// L2 hot-path allocation: only looks inside fences; any file may fence.
+pub fn l2_hot_path(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.fences.is_empty() {
+        return;
+    }
+    let toks = &ctx.scanned.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if !ctx.in_fence(t.line) || ctx.in_tests(t.line) || ctx.waived(t.line, "alloc-ok") {
+            continue;
+        }
+        // `format!` / `vec!` macro invocations.
+        if (t.is_ident("format") || t.is_ident("vec"))
+            && matches!(toks.get(i + 1), Some(n) if n.is_punct("!"))
+        {
+            ctx.push(
+                out,
+                t.line,
+                Rule::HotPathAlloc,
+                format!("`{}!` allocates inside a hot-path fence", t.text),
+            );
+            continue;
+        }
+        // `Vec::new`, `String::with_capacity`, `Box::new`, `Vec::from`, ...
+        if L2_TYPES.contains(&t.text.as_str())
+            && matches!(toks.get(i + 1), Some(n) if n.is_punct(":"))
+            && matches!(toks.get(i + 2), Some(n) if n.is_punct(":"))
+        {
+            if let Some(c) = toks.get(i + 3) {
+                if L2_CTORS.contains(&c.text.as_str()) || c.is_ident("from") {
+                    ctx.push(
+                        out,
+                        t.line,
+                        Rule::HotPathAlloc,
+                        format!("`{}::{}` allocates inside a hot-path fence", t.text, c.text),
+                    );
+                    continue;
+                }
+            }
+        }
+        // `.clone()` / `.collect()` / `.to_vec()` / ...
+        if t.is_punct(".") {
+            if let Some(m) = toks.get(i + 1) {
+                if L2_METHODS.contains(&m.text.as_str()) {
+                    ctx.push(
+                        out,
+                        m.line,
+                        Rule::HotPathAlloc,
+                        format!("`.{}()` allocates inside a hot-path fence", m.text),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Receiver methods whose `Result` must not be unwrapped on the live path.
+const L3_SOURCES: [&str; 7] =
+    ["lock", "try_lock", "recv", "try_recv", "recv_timeout", "send", "join"];
+
+/// L3 panic hygiene: applies to `coordinator/` only.
+pub fn l3_panic_hygiene(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.top_dir() != "coordinator" {
+        return;
+    }
+    let toks = &ctx.scanned.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if !L3_SOURCES.contains(&t.text.as_str()) || t.kind != super::scan::TokKind::Ident {
+            continue;
+        }
+        if ctx.in_tests(t.line) {
+            continue;
+        }
+        // Require a call: `lock ( ... )`, then `.unwrap` / `.expect`.
+        let Some(open) = toks.get(i + 1) else { continue };
+        if !open.is_punct("(") {
+            continue;
+        }
+        let Some(close) = match_paren(toks, i + 1) else { continue };
+        let (Some(dot), Some(m)) = (toks.get(close + 1), toks.get(close + 2)) else {
+            continue;
+        };
+        if dot.is_punct(".") && (m.is_ident("unwrap") || m.is_ident("expect")) {
+            if ctx.waived(m.line, "may-panic") {
+                continue;
+            }
+            ctx.push(
+                out,
+                m.line,
+                Rule::PanicHygiene,
+                format!(
+                    "`{}().{}()` can panic the live path — handle the Err (poison/disconnect) or waive with `// lint: may-panic`",
+                    t.text, m.text
+                ),
+            );
+        }
+    }
+}
+
+/// L5 float ordering: `partial_cmp(..).unwrap()`/`.expect()` anywhere in
+/// src/ must go through the canonical `util::stats::cmp_f64` instead.
+pub fn l5_float_ordering(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let toks = &ctx.scanned.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if !t.is_ident("partial_cmp") || ctx.in_tests(t.line) {
+            continue;
+        }
+        let Some(open) = toks.get(i + 1) else { continue };
+        if !open.is_punct("(") {
+            continue;
+        }
+        let Some(close) = match_paren(toks, i + 1) else { continue };
+        let (Some(dot), Some(m)) = (toks.get(close + 1), toks.get(close + 2)) else {
+            continue;
+        };
+        if dot.is_punct(".") && (m.is_ident("unwrap") || m.is_ident("expect")) {
+            if ctx.waived(m.line, "total-order") {
+                continue;
+            }
+            ctx.push(
+                out,
+                m.line,
+                Rule::FloatOrdering,
+                "raw `partial_cmp().unwrap()` — use `util::stats::cmp_f64` (total order) or waive with `// lint: total-order`"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// Index of the `)` matching the `(` at `open`, skipping nested parens.
+fn match_paren(toks: &[Tok], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct("(") {
+            depth += 1;
+        } else if t.is_punct(")") {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// L4 exporter exhaustiveness: every variant of `enum TraceEvent` in
+/// `obs/mod.rs` must be named (as `TraceEvent :: Variant`) in both
+/// `obs/chrome.rs` and `obs/prom.rs`.
+pub fn l4_exporters(files: &[(String, Scanned)], out: &mut Vec<Finding>) {
+    let Some((_, enum_file)) = files.iter().find(|(p, _)| p == "obs/mod.rs") else {
+        return;
+    };
+    let variants = enum_variants(&enum_file.toks, "TraceEvent");
+    if variants.is_empty() {
+        return;
+    }
+    for exporter in ["obs/chrome.rs", "obs/prom.rs"] {
+        let Some((_, sc)) = files.iter().find(|(p, _)| p == exporter) else {
+            continue;
+        };
+        for (v, line) in &variants {
+            if !mentions_variant(&sc.toks, "TraceEvent", v) {
+                out.push(Finding {
+                    file: exporter.to_string(),
+                    line: *line,
+                    rule: Rule::ExporterExhaustive,
+                    message: format!(
+                        "TraceEvent::{v} (obs/mod.rs:{line}) is not handled by {exporter}"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Variant names (with declaration lines) of `enum <name> { ... }`.
+pub fn enum_variants(toks: &[Tok], name: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if toks[i].is_ident("enum") && toks[i + 1].is_ident(name) && toks[i + 2].is_punct("{") {
+            let mut depth = 0usize;
+            let mut expect_variant = false;
+            let mut j = i + 2;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.is_punct("{") || t.is_punct("(") || t.is_punct("[") {
+                    depth += 1;
+                    if depth == 1 {
+                        expect_variant = true;
+                    }
+                } else if t.is_punct("}") || t.is_punct(")") || t.is_punct("]") {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 && t.is_punct("}") {
+                        return out;
+                    }
+                } else if depth == 1 {
+                    if t.is_punct(",") {
+                        expect_variant = true;
+                    } else if t.is_punct("#") {
+                        // attribute on a variant; brackets bump depth past 1
+                    } else if expect_variant && t.kind == super::scan::TokKind::Ident {
+                        out.push((t.text.clone(), t.line));
+                        expect_variant = false;
+                    }
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// True when the token stream contains `<enum> :: <variant>`.
+fn mentions_variant(toks: &[Tok], enum_name: &str, variant: &str) -> bool {
+    toks.windows(4).any(|w| {
+        w[0].is_ident(enum_name)
+            && w[1].is_punct(":")
+            && w[2].is_punct(":")
+            && w[3].is_ident(variant)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    fn run_file(path: &str, src: &str) -> Vec<Finding> {
+        let scanned = scan(src);
+        let mut out = Vec::new();
+        let ctx = FileCtx::new(path, &scanned, &mut out);
+        l1_determinism(&ctx, &mut out);
+        l2_hot_path(&ctx, &mut out);
+        l3_panic_hygiene(&ctx, &mut out);
+        l5_float_ordering(&ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn l1_scope_is_enforced() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run_file("sim/a.rs", src).len(), 1);
+        assert_eq!(run_file("util/a.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn l1_waiver_suppresses() {
+        let src = "// lint: sorted\nuse std::collections::HashMap;\n";
+        assert!(run_file("obs/a.rs", src).is_empty());
+    }
+
+    #[test]
+    fn l2_fires_only_in_fences() {
+        let src = "fn a() { let v = Vec::new(); }\n// lint: hot-path\nfn b() { let v = Vec::new(); }\n// lint: end-hot-path\n";
+        let f = run_file("sched/a.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+        assert_eq!(f[0].rule, Rule::HotPathAlloc);
+    }
+
+    #[test]
+    fn l2_unclosed_fence_is_a_finding() {
+        let f = run_file("sim/a.rs", "// lint: hot-path\nfn a() {}\n");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("never closed"));
+    }
+
+    #[test]
+    fn l3_requires_call_then_unwrap() {
+        let src = "fn a(m: &std::sync::Mutex<u32>) { let g = m.lock().unwrap(); drop(g); }\n";
+        let f = run_file("coordinator/a.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::PanicHygiene);
+        // `match m.lock() { .. }` is fine.
+        let ok = "fn a(m: &std::sync::Mutex<u32>) { match m.lock() { Ok(_) => {} Err(_) => {} } }\n";
+        assert!(run_file("coordinator/a.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn l5_ignores_trait_impls() {
+        let src = "impl PartialOrd for S { fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> { Some(std::cmp::Ordering::Equal) } }\n";
+        assert!(run_file("coordinator/a.rs", src).is_empty());
+        let bad = "fn s(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        assert_eq!(run_file("util/a.rs", bad).len(), 1);
+    }
+
+    #[test]
+    fn l4_flags_missing_variant() {
+        let enum_src = "pub enum TraceEvent { A { x: u32 }, B(u64), C, }\n";
+        let chrome = "fn f(e: &TraceEvent) { match e { TraceEvent::A { .. } => {} TraceEvent::B(_) => {} TraceEvent::C => {} } }\n";
+        let prom = "fn f(e: &TraceEvent) { if let TraceEvent::A { .. } = e {} }\n";
+        let files = vec![
+            ("obs/mod.rs".to_string(), scan(enum_src)),
+            ("obs/chrome.rs".to_string(), scan(chrome)),
+            ("obs/prom.rs".to_string(), scan(prom)),
+        ];
+        let mut out = Vec::new();
+        l4_exporters(&files, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|f| f.file == "obs/prom.rs"));
+        assert!(out.iter().any(|f| f.message.contains("TraceEvent::B")));
+        assert!(out.iter().any(|f| f.message.contains("TraceEvent::C")));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n  use std::collections::HashMap;\n  fn t(m: &std::sync::Mutex<u32>) { let _ = m.lock().unwrap(); }\n}\n";
+        assert!(run_file("sim/a.rs", src).is_empty());
+        assert!(run_file("coordinator/a.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,461 @@
+//! Token-level scanner for `compass-lint`.
+//!
+//! A deliberately small lexer: it understands exactly enough Rust surface
+//! syntax to walk a source file as a stream of identifier and punctuation
+//! tokens while *skipping* the places where rule trigger words are
+//! meaningless — comments, string literals (normal, raw, byte), char
+//! literals, and numeric literals. Line comments are inspected before
+//! being discarded so `// lint: ...` directives (fences and waivers) are
+//! captured with their line numbers.
+//!
+//! The scanner is std-only and makes no attempt at full fidelity; the
+//! rules in [`super::rules`] operate on whole-identifier matches, so the
+//! only hard requirements are (a) never split an identifier, and (b) never
+//! emit tokens from skipped regions.
+
+/// Kind of a lexed token. Only the two classes the rules consume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+}
+
+/// One token: its kind, text, and 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// A `// lint: <text>` directive captured from a line comment.
+#[derive(Debug, Clone)]
+pub struct Directive {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Result of scanning one source file.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    pub toks: Vec<Tok>,
+    pub directives: Vec<Directive>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Scan `src` into tokens and directives. Operates on bytes; non-ASCII
+/// bytes can only occur inside comments/strings in this crate and are
+/// passed over as punctuation-free filler.
+pub fn scan(src: &str) -> Scanned {
+    let b = src.as_bytes();
+    let mut out = Scanned::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                capture_directive(&src[start..i], line, &mut out.directives);
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Block comment; Rust block comments nest.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                i = skip_string(b, i, &mut line);
+            }
+            b'\'' => {
+                i = skip_char_or_lifetime(b, i, line, &mut out.toks);
+            }
+            _ if is_ident_start(c) => {
+                let start = i;
+                while i < b.len() && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                // Raw strings / byte strings / raw identifiers share the
+                // ident-then-sigil shape: r"..", r#".."#, b"..", br#".."#,
+                // b'x', r#keyword.
+                if let Some(next) = raw_or_byte_start(b, i, word) {
+                    match next {
+                        RawNext::Str(j) => {
+                            i = skip_raw_string(b, j, &mut line);
+                            continue;
+                        }
+                        RawNext::PlainStr(j) => {
+                            i = skip_string(b, j, &mut line);
+                            continue;
+                        }
+                        RawNext::Char(j) => {
+                            i = skip_char(b, j, &mut line);
+                            continue;
+                        }
+                        RawNext::RawIdent(j) => {
+                            let start2 = j;
+                            let mut k = j;
+                            while k < b.len() && is_ident_cont(b[k]) {
+                                k += 1;
+                            }
+                            out.toks.push(Tok {
+                                kind: TokKind::Ident,
+                                text: src[start2..k].to_string(),
+                                line,
+                            });
+                            i = k;
+                            continue;
+                        }
+                    }
+                }
+                out.toks.push(Tok { kind: TokKind::Ident, text: word.to_string(), line });
+            }
+            _ if c.is_ascii_digit() => {
+                // Numeric literal: consume digits plus any literal suffix /
+                // exponent / underscores without emitting tokens. The `.`
+                // of a float is folded in only when followed by a digit so
+                // `1.clone()` (not valid Rust anyway) would not eat the dot.
+                i += 1;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric()
+                        || b[i] == b'_'
+                        || (b[i] == b'.' && i + 1 < b.len() && b[i + 1].is_ascii_digit()))
+                {
+                    i += 1;
+                }
+                // Trailing `.` of `1.` style floats.
+                if i < b.len() && b[i] == b'.' && (i + 1 >= b.len() || !is_ident_start(b[i + 1])) {
+                    i += 1;
+                }
+            }
+            b' ' | b'\t' | b'\r' => {
+                i += 1;
+            }
+            _ => {
+                out.toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    line,
+                });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// What follows an identifier that might prefix a literal.
+enum RawNext {
+    /// Raw string starts: position of the first `#` or `"`.
+    Str(usize),
+    /// Byte string `b"` — plain string rules apply from the quote.
+    PlainStr(usize),
+    /// Byte char `b'x'` — position of the quote.
+    Char(usize),
+    /// Raw identifier `r#name` — position of the name start.
+    RawIdent(usize),
+}
+
+fn raw_or_byte_start(b: &[u8], i: usize, word: &str) -> Option<RawNext> {
+    if i >= b.len() {
+        return None;
+    }
+    match word {
+        "r" | "br" => match b[i] {
+            b'"' | b'#' => {
+                if word == "r" && b[i] == b'#' && i + 1 < b.len() && is_ident_start(b[i + 1]) {
+                    Some(RawNext::RawIdent(i + 1))
+                } else {
+                    Some(RawNext::Str(i))
+                }
+            }
+            _ => None,
+        },
+        "b" => match b[i] {
+            b'"' => Some(RawNext::PlainStr(i)),
+            b'\'' => Some(RawNext::Char(i)),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Skip a normal (escaped) string literal starting at the opening quote.
+/// Returns the index just past the closing quote.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1; // opening quote
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a raw string starting at the first `#` or `"` after the `r`/`br`
+/// prefix. Returns the index just past the closing delimiter.
+fn skip_raw_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'"' {
+        i += 1;
+    }
+    while i < b.len() {
+        if b[i] == b'"' {
+            let mut k = i + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return k;
+            }
+        }
+        if b[i] == b'\n' {
+            *line += 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Skip a byte-char literal `b'x'` starting at the quote.
+fn skip_char(b: &[u8], mut i: usize, _line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Disambiguate `'` between a char literal and a lifetime. Char literals
+/// are skipped; for lifetimes the tick is dropped and the following
+/// identifier tokenizes normally on the next loop iteration (lifetimes
+/// never collide with rule trigger words, so emitting them is harmless).
+fn skip_char_or_lifetime(b: &[u8], i: usize, _line: u32, _toks: &mut Vec<Tok>) -> usize {
+    // `'\...'` is always a char literal.
+    if i + 1 < b.len() && b[i + 1] == b'\\' {
+        let mut k = i + 2;
+        if k < b.len() {
+            k += 1; // escaped char
+        }
+        // Multi-char escapes (\x41, \u{..}) — scan to the closing quote.
+        while k < b.len() && b[k] != b'\'' {
+            k += 1;
+        }
+        return k + 1;
+    }
+    // `'x'` — one char then a closing quote.
+    if i + 2 < b.len() && b[i + 2] == b'\'' {
+        return i + 3;
+    }
+    // Lifetime: consume only the tick.
+    i + 1
+}
+
+/// If `comment` is a `// lint: <text>` directive, record it.
+fn capture_directive(comment: &str, line: u32, out: &mut Vec<Directive>) {
+    // Strip `//`, any further `/` (doc comments) or `!` (inner doc).
+    let body = comment.trim_start_matches('/').trim_start_matches('!').trim();
+    if let Some(rest) = body.strip_prefix("lint:") {
+        out.push(Directive { line, text: rest.trim().to_string() });
+    }
+}
+
+/// Half-open line ranges `[start, end]` (inclusive) covered by
+/// `#[cfg(test)]` items. Rules skip findings inside these ranges: test
+/// code is allowed to use wall clocks, HashMaps, unwraps, and friends.
+pub fn test_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_at(toks, i) {
+            let start_line = toks[i].line;
+            // Walk to the end of the annotated item: the matching close
+            // brace of its first `{`, or a `;` at depth 0 for braceless
+            // items (`#[cfg(test)] use ...;`).
+            let mut j = i + 7; // past `# [ cfg ( test ) ]`
+            let mut depth = 0usize;
+            let mut end_line = start_line;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.is_punct("{") {
+                    depth += 1;
+                } else if t.is_punct("}") {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        end_line = t.line;
+                        j += 1;
+                        break;
+                    }
+                } else if t.is_punct(";") && depth == 0 {
+                    end_line = t.line;
+                    j += 1;
+                    break;
+                }
+                end_line = t.line;
+                j += 1;
+            }
+            ranges.push((start_line, end_line));
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    ranges
+}
+
+/// Token pattern `# [ cfg ( test ) ]` beginning at index `i`.
+fn is_cfg_test_at(toks: &[Tok], i: usize) -> bool {
+    i + 6 < toks.len()
+        && toks[i].is_punct("#")
+        && toks[i + 1].is_punct("[")
+        && toks[i + 2].is_ident("cfg")
+        && toks[i + 3].is_punct("(")
+        && toks[i + 4].is_ident("test")
+        && toks[i + 5].is_punct(")")
+        && toks[i + 6].is_punct("]")
+}
+
+/// True when `line` falls inside any of `ranges`.
+pub fn in_ranges(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(s, e)| s <= line && line <= e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(s: &Scanned) -> Vec<&str> {
+        s.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_skipped() {
+        let s = scan("let x = \"Instant::now()\"; // HashMap here\n/* SystemTime */ let y = 1;");
+        let ids = idents(&s);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+    }
+
+    #[test]
+    fn raw_strings_are_skipped() {
+        let s = scan("let x = r#\"thread_rng \"quoted\" inside\"#; let z = br\"HashSet\";");
+        let ids = idents(&s);
+        assert_eq!(ids, vec!["let", "x", "let", "z"]);
+    }
+
+    #[test]
+    fn raw_identifiers_tokenize() {
+        let s = scan("let r#type = 1;");
+        assert!(s.toks.iter().any(|t| t.is_ident("type")));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let s = scan("let c = 'x'; fn f<'a>(v: &'a str) {} let q = '\\n';");
+        let ids = idents(&s);
+        assert!(ids.contains(&"a")); // lifetime ident survives
+        assert!(!ids.contains(&"x")); // char literal content does not
+        assert!(!ids.contains(&"n"));
+    }
+
+    #[test]
+    fn directives_are_captured_with_lines() {
+        let s = scan("fn a() {}\n// lint: hot-path\nfn b() {}\n// lint: end-hot-path\n");
+        assert_eq!(s.directives.len(), 2);
+        assert_eq!(s.directives[0].line, 2);
+        assert_eq!(s.directives[0].text, "hot-path");
+        assert_eq!(s.directives[1].line, 4);
+        assert_eq!(s.directives[1].text, "end-hot-path");
+    }
+
+    #[test]
+    fn doc_comment_directives_are_captured() {
+        let s = scan("/// lint: sorted\nstruct S;");
+        assert_eq!(s.directives.len(), 1);
+        assert_eq!(s.directives[0].text, "sorted");
+    }
+
+    #[test]
+    fn cfg_test_ranges_cover_modules_and_braceless_items() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n  fn t() { let m = 1; }\n}\n#[cfg(test)]\nuse std::collections::HashMap;\nfn live2() {}\n";
+        let s = scan(src);
+        let r = test_ranges(&s.toks);
+        assert_eq!(r.len(), 2);
+        assert!(in_ranges(&r, 3));
+        assert!(in_ranges(&r, 4));
+        assert!(in_ranges(&r, 7));
+        assert!(!in_ranges(&r, 1));
+        assert!(!in_ranges(&r, 8));
+    }
+
+    #[test]
+    fn line_numbers_track_through_literals() {
+        let s = scan("let a = \"one\nstill the string\";\nlet b = 2;");
+        let b_tok = s.toks.iter().find(|t| t.is_ident("b")).expect("b token");
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn numbers_do_not_emit_tokens() {
+        let s = scan("let x = 1_000u64 + 2.5e3 + 0xFFu8;");
+        let ids = idents(&s);
+        assert_eq!(ids, vec!["let", "x"]);
+    }
+}

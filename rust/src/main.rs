@@ -6,6 +6,7 @@
 //!   serve       run the live coordinator on the AOT artifacts
 //!   validate    compare simulator vs live coordinator (§5.4 methodology)
 //!   models      list compiled artifacts and run handshakes
+//!   lint        run compass-lint invariant checks over the crate sources
 
 use compass::util::args::Args;
 
@@ -25,7 +26,8 @@ fn usage() -> ! {
          \x20             [--batch-max B] [--batch-window-us U] [--batch-alpha A]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 validate    [--jobs N] [--artifacts DIR]\n\
-         \x20 models      [--artifacts DIR]"
+         \x20 models      [--artifacts DIR]\n\
+         \x20 lint        [--root DIR] [--json FILE]"
     );
     std::process::exit(2);
 }
@@ -38,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("models") => cmd_models(&args),
+        Some("lint") => cmd_lint(&args),
         Some("smoke-dump") => cmd_smoke_dump(args.positional.get(1).map(String::as_str).unwrap_or("bart")),
         _ => usage(),
     }
@@ -129,6 +132,25 @@ fn cmd_models(args: &Args) -> anyhow::Result<()> {
             m.meta.d_model,
             m.meta.path.display()
         );
+    }
+    Ok(())
+}
+
+/// `compass lint` — run the invariant checker over the crate sources
+/// (DESIGN.md §8). Exits nonzero when any finding fires, which is what
+/// makes the CI `compass-lint` job a gate.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let root = args
+        .get_path("root")
+        .unwrap_or_else(|| std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src"));
+    let report = compass::lint::lint_tree(&root)?;
+    if let Some(p) = args.get_path("json") {
+        std::fs::write(&p, report.to_json())?;
+        println!("lint report written to {}", p.display());
+    }
+    print!("{}", report.render());
+    if !report.clean() {
+        std::process::exit(1);
     }
     Ok(())
 }

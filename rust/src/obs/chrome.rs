@@ -69,7 +69,9 @@ pub fn chrome_trace(trace: &Trace) -> String {
                 workers.insert(decider);
                 workers.insert(chosen);
             }
-            _ => {}
+            // Job lifecycle events live on the synthetic jobs track, not a
+            // worker track. Exhaustive by design (lint rule L4).
+            TraceEvent::JobArrive { .. } | TraceEvent::JobComplete { .. } => {}
         }
     }
     let _ = writeln!(
@@ -173,7 +175,14 @@ pub fn chrome_trace(trace: &Trace) -> String {
                 let name = format!("batch executed m{model} x{size}");
                 instant(&mut out, &name, "batch", worker as u32, t, &args);
             }
-            _ => {}
+            // Task/fetch edge events are rendered as reconstructed duration
+            // spans above (task_spans / fetch_spans), not as instants.
+            // Exhaustive by design (lint rule L4).
+            TraceEvent::TaskEnqueue { .. }
+            | TraceEvent::ExecStart { .. }
+            | TraceEvent::ExecEnd { .. }
+            | TraceEvent::FetchStart { .. }
+            | TraceEvent::FetchEnd { .. } => {}
         }
     }
 

@@ -32,7 +32,7 @@ pub use hist::Histogram;
 
 use crate::core::{JobId, Micros, ModelId};
 use crate::dfg::PipelineKind;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Max scored candidates kept per scheduling decision. Schedulers may score
 /// every worker; the probe keeps the best `MAX_CANDIDATES` by score and
@@ -310,8 +310,8 @@ impl Trace {
     /// ExecEnd per (job, task). Tasks whose edges fell off the ring are
     /// skipped.
     pub fn task_spans(&self) -> Vec<TaskSpan> {
-        let mut enq: HashMap<(JobId, u16), Micros> = HashMap::new();
-        let mut started: HashMap<(JobId, u16), (u16, Micros, Micros)> = HashMap::new();
+        let mut enq: BTreeMap<(JobId, u16), Micros> = BTreeMap::new();
+        let mut started: BTreeMap<(JobId, u16), (u16, Micros, Micros)> = BTreeMap::new();
         let mut out = Vec::new();
         for ev in &self.events {
             match *ev {
@@ -343,7 +343,7 @@ impl Trace {
 
     /// Reconstruct completed model-fetch spans per (worker, model).
     pub fn fetch_spans(&self) -> Vec<FetchSpan> {
-        let mut open: HashMap<(u16, ModelId), Micros> = HashMap::new();
+        let mut open: BTreeMap<(u16, ModelId), Micros> = BTreeMap::new();
         let mut out = Vec::new();
         for ev in &self.events {
             match *ev {

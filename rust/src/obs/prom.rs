@@ -4,8 +4,9 @@
 //! Prometheus scraper accept. Histograms use the standard cumulative
 //! `_bucket{le=...}` / `_sum` / `_count` triple with `le` in seconds.
 
-use super::{Histogram, Trace};
+use super::{Histogram, Trace, TraceEvent};
 use crate::metrics::MetricsSink;
+use std::collections::BTreeMap;
 use std::fmt::Write;
 
 const US_PER_SEC: f64 = 1_000_000.0;
@@ -63,6 +64,30 @@ fn histogram_unitless(out: &mut String, name: &str, help: &str, h: &Histogram) {
     let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count());
     let _ = writeln!(out, "{name}_sum {}", h.sum());
     let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Stable `kind` label for a trace event. This match is deliberately
+/// exhaustive — no `_` arm — so adding a `TraceEvent` variant without a
+/// Prometheus series label is a compile error; `compass-lint` L4
+/// additionally cross-checks that every variant is named here.
+fn event_kind(ev: &TraceEvent) -> &'static str {
+    match ev {
+        TraceEvent::JobArrive { .. } => "job_arrive",
+        TraceEvent::JobComplete { .. } => "job_complete",
+        TraceEvent::TaskEnqueue { .. } => "task_enqueue",
+        TraceEvent::ExecStart { .. } => "exec_start",
+        TraceEvent::ExecEnd { .. } => "exec_end",
+        TraceEvent::FetchStart { .. } => "fetch_start",
+        TraceEvent::FetchEnd { .. } => "fetch_end",
+        TraceEvent::Decision { .. } => "decision",
+        TraceEvent::CacheHit { .. } => "cache_hit",
+        TraceEvent::CacheMiss { .. } => "cache_miss",
+        TraceEvent::CacheInsert { .. } => "cache_insert",
+        TraceEvent::CacheEvict { .. } => "cache_evict",
+        TraceEvent::SstStaleness { .. } => "sst_staleness",
+        TraceEvent::BatchFormed { .. } => "batch_formed",
+        TraceEvent::BatchExecuted { .. } => "batch_executed",
+    }
 }
 
 /// Render an end-of-run metrics snapshot, optionally enriched with
@@ -180,11 +205,22 @@ pub fn prometheus_snapshot(m: &MetricsSink, trace: Option<&Trace>) -> String {
             &tr.batch_size_hist(),
         );
         let (mut batches, mut batched_tasks) = (0u64, 0u64);
+        let mut by_kind: BTreeMap<&'static str, u64> = BTreeMap::new();
         for ev in &tr.events {
-            if let super::TraceEvent::BatchExecuted { size, .. } = *ev {
+            *by_kind.entry(event_kind(ev)).or_insert(0) += 1;
+            if let TraceEvent::BatchExecuted { size, .. } = *ev {
                 batches += 1;
                 batched_tasks += size as u64;
             }
+        }
+        // Per-kind event counts; BTreeMap keeps label order deterministic.
+        let _ = writeln!(
+            out,
+            "# HELP compass_trace_events_by_kind_total Trace events retained, by event kind."
+        );
+        let _ = writeln!(out, "# TYPE compass_trace_events_by_kind_total counter");
+        for (kind, n) in &by_kind {
+            let _ = writeln!(out, "compass_trace_events_by_kind_total{{kind=\"{kind}\"}} {n}");
         }
         counter(
             &mut out,
@@ -270,6 +306,9 @@ mod tests {
         assert!(text.contains("compass_task_queue_wait_seconds_count 1"));
         assert!(text.contains("compass_task_exec_seconds_count 1"));
         assert!(text.contains("compass_trace_events_total 3"));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"task_enqueue\"} 1"));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"exec_start\"} 1"));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"exec_end\"} 1"));
     }
 
     #[test]

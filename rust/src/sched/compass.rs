@@ -90,6 +90,10 @@ impl Scheduler for Compass {
         }
         let mut adfg = Adfg::unassigned(n);
 
+        // lint: hot-path
+        // The Algorithm 1 planning loop runs for every job against every
+        // worker; PlanScratch exists precisely so this region allocates
+        // nothing (PR 2).
         // Lines 4-12: descending rank order (precomputed statically, §4.2.1).
         for &t in dfg.rank_order() {
             probe.begin(t);
@@ -165,6 +169,7 @@ impl Scheduler for Compass {
                 }
             }
         }
+        // lint: end-hot-path
         adfg
     }
 
@@ -197,6 +202,9 @@ impl Scheduler for Compass {
         // Lines 6-12: rank workers by earliest finish for this task. All
         // inputs already exist (t just became dispatchable), so they are
         // available `now` at their holders.
+        // lint: hot-path
+        // Algorithm 2 runs on every task dispatch; like planning, it must
+        // not allocate per decision.
         let mut best = planned;
         let mut best_ft = Micros::MAX;
         for w in 0..view.n_workers() {
@@ -214,6 +222,7 @@ impl Scheduler for Compass {
                 best = w;
             }
         }
+        // lint: end-hot-path
         best
     }
 }

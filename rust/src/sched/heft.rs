@@ -40,6 +40,9 @@ impl Scheduler for Heft {
         task_ft.resize(n, 0);
         let mut adfg = Adfg::unassigned(n);
 
+        // lint: hot-path
+        // HEFT's planning loop shares PlanScratch with Algorithm 1 and the
+        // same allocation budget: none.
         for &t in dfg.rank_order() {
             probe.begin(t);
             let mut best_w = 0;
@@ -68,6 +71,7 @@ impl Scheduler for Heft {
             task_ft[t] = best_ft;
             avail[best_w] = best_ft;
         }
+        // lint: end-hot-path
         adfg
     }
 

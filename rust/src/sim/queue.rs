@@ -59,6 +59,10 @@ impl<T> EventQueue<T> {
         self.heap.is_empty()
     }
 
+    // lint: hot-path
+    // Per-event operations: every simulated event passes through push/pop,
+    // so this region must stay allocation-free in steady state (the slab
+    // free list recycles slots; `Vec::push` growth is amortized-zero).
     pub fn push(&mut self, at: Micros, ev: T) {
         let slot = match self.free.pop() {
             Some(s) => {
@@ -120,6 +124,7 @@ impl<T> EventQueue<T> {
             i = min;
         }
     }
+    // lint: end-hot-path
 
     /// Arena footprint (live + free slots) — exposed for the reuse test.
     #[cfg(test)]

@@ -225,6 +225,9 @@ impl SimWorker {
     /// the plain runtime sum; with batching on, queued runtimes are grouped
     /// by model and drained through the coalescing cost curve, so peers see
     /// the shorter finish times batch-friendly queues actually achieve.
+    // lint: hot-path
+    // Called once per candidate worker per scheduling decision — the
+    // single hottest read path in the simulator (PR 2/PR 3 perf work).
     pub fn ft_estimate(&self, now: Micros, batch: &BatchConfig) -> Micros {
         let base = if !self.running.is_empty() { self.exec_end.max(now) } else { now };
         if !batch.enabled() {
@@ -244,6 +247,7 @@ impl SimWorker {
         // Model-less tasks (pre/post-processing vertices) never batch.
         base + drain + (self.queued_runtime_us - modeled_sum)
     }
+    // lint: end-hot-path
 
     /// The worker's own live SST row (always current for itself).
     pub fn live_row(&self, now: Micros, batch: &BatchConfig) -> SstRow {

@@ -64,7 +64,7 @@ impl Bench {
                 break;
             }
         }
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_ns.sort_by(|a, b| crate::util::stats::cmp_f64(*a, *b));
         let n = samples_ns.len();
         let report = BenchReport {
             name: self.name.clone(),

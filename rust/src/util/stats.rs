@@ -1,6 +1,17 @@
 //! Descriptive statistics for experiment reporting: percentiles, box-plot
 //! summaries (matching the paper's Figure 6 box semantics), and means.
 
+use std::cmp::Ordering;
+
+/// Canonical total-order comparison for `f64` (lint rule L5). IEEE-754
+/// total order: every float (including NaN) sorts deterministically, so
+/// scoring and percentile sorts can never panic or diverge between runs.
+/// All scheduler tie-breaks and stat sorts must route through this helper
+/// instead of raw `partial_cmp().unwrap()`.
+pub fn cmp_f64(a: f64, b: f64) -> Ordering {
+    a.total_cmp(&b)
+}
+
 /// Five-number box-plot summary plus whiskers as drawn in the paper's
 /// Figure 6: box = [Q1, Q3], whiskers at 1.5 IQR, the rest outliers.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,7 +44,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 /// Percentile of an unsorted sample.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| cmp_f64(*a, *b));
     percentile_sorted(&v, p)
 }
 
@@ -52,7 +63,7 @@ impl BoxStats {
     pub fn from(xs: &[f64]) -> BoxStats {
         assert!(!xs.is_empty(), "BoxStats of empty sample");
         let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| cmp_f64(*a, *b));
         let q1 = percentile_sorted(&v, 25.0);
         let q3 = percentile_sorted(&v, 75.0);
         let iqr = q3 - q1;
@@ -125,5 +136,16 @@ mod tests {
     fn mean_median_single() {
         assert_eq!(mean(&[4.0]), 4.0);
         assert_eq!(median(&[4.0]), 4.0);
+    }
+
+    #[test]
+    fn cmp_f64_totally_orders_nan() {
+        let mut v = [2.0, f64::NAN, 1.0, -0.0, 0.0];
+        v.sort_by(|a, b| cmp_f64(*a, *b));
+        assert_eq!(v[0], -0.0);
+        assert_eq!(v[2], 1.0);
+        assert!(v[4].is_nan()); // NaN sorts last, deterministically
+        assert_eq!(cmp_f64(1.0, 1.0), Ordering::Equal);
+        assert_eq!(cmp_f64(1.0, 2.0), Ordering::Less);
     }
 }

@@ -1,0 +1,292 @@
+//! Fixture-driven tests of the `compass-lint` engine (DESIGN.md §8):
+//! every rule must fire exactly where a seeded violation sits, waivers
+//! must suppress, out-of-scope files must stay silent, `#[cfg(test)]`
+//! regions are exempt — and the crate's own `src/` tree must lint clean,
+//! which makes `cargo test` itself enforce the invariants CI gates on.
+
+use compass::lint::{lint_sources, lint_tree, Finding, Rule};
+
+fn files(list: &[(&str, &str)]) -> Vec<(String, String)> {
+    list.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect()
+}
+
+fn lines_of(findings: &[Finding], rule: Rule) -> Vec<(String, u32)> {
+    findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| (f.file.clone(), f.line))
+        .collect()
+}
+
+// ---------------------------------------------------------------- L1
+
+#[test]
+fn l1_fires_on_each_determinism_hazard_at_exact_lines() {
+    let src = "use std::time::Instant;\n\
+               use std::collections::HashMap;\n\
+               fn ok() {}\n\
+               fn t() { let _ = thread_rng(); }\n\
+               use std::time::SystemTime;\n";
+    for dir in ["sim", "sched", "exp", "obs"] {
+        let f = lint_sources(&files(&[(&format!("{dir}/fx.rs"), src)]));
+        let got = lines_of(&f, Rule::Determinism);
+        assert_eq!(
+            got.iter().map(|(_, l)| *l).collect::<Vec<_>>(),
+            vec![1, 2, 4, 5],
+            "L1 lines in {dir}/"
+        );
+    }
+}
+
+#[test]
+fn l1_silent_outside_scope() {
+    let src = "use std::time::Instant;\nuse std::collections::HashMap;\n";
+    for dir in ["util", "coordinator", "runtime", "gpu"] {
+        let f = lint_sources(&files(&[(&format!("{dir}/fx.rs"), src)]));
+        assert!(lines_of(&f, Rule::Determinism).is_empty(), "{dir}/ must be out of L1 scope");
+    }
+}
+
+#[test]
+fn l1_waivers_suppress_on_same_or_preceding_line() {
+    let src = "// lint: sorted\n\
+               use std::collections::HashMap;\n\
+               use std::time::Instant; // lint: wall-clock\n";
+    let f = lint_sources(&files(&[("sim/fx.rs", src)]));
+    assert!(lines_of(&f, Rule::Determinism).is_empty(), "waived lines must not fire: {f:?}");
+}
+
+#[test]
+fn l1_wrong_waiver_kind_does_not_suppress() {
+    // A `sorted` waiver must not excuse a wall-clock hazard.
+    let src = "// lint: sorted\nuse std::time::Instant;\n";
+    let f = lint_sources(&files(&[("sim/fx.rs", src)]));
+    assert_eq!(lines_of(&f, Rule::Determinism), vec![("sim/fx.rs".to_string(), 2)]);
+}
+
+#[test]
+fn l1_ignores_strings_comments_and_test_modules() {
+    let src = "fn a() { let _ = \"Instant::now() HashMap\"; }\n\
+               // a comment mentioning SystemTime and HashSet\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   use std::collections::HashMap;\n\
+                   use std::time::Instant;\n\
+               }\n";
+    let f = lint_sources(&files(&[("obs/fx.rs", src)]));
+    assert!(f.is_empty(), "strings/comments/test modules must be exempt: {f:?}");
+}
+
+// ---------------------------------------------------------------- L2
+
+#[test]
+fn l2_fires_inside_fence_only() {
+    let src = "fn cold() { let v: Vec<u32> = Vec::new(); let s = format!(\"x\"); drop((v, s)); }\n\
+               // lint: hot-path\n\
+               fn hot(xs: &[u32]) -> Vec<u32> {\n\
+                   let v = Vec::new();\n\
+                   let s = format!(\"x\");\n\
+                   let c = xs.to_vec().clone();\n\
+                   let w: Vec<u32> = xs.iter().copied().collect();\n\
+                   drop((v, s, c)); w\n\
+               }\n\
+               // lint: end-hot-path\n\
+               fn cold2() { let _ = vec![1]; }\n";
+    let f = lint_sources(&files(&[("sim/fx.rs", src)]));
+    let got: Vec<u32> = lines_of(&f, Rule::HotPathAlloc).iter().map(|(_, l)| *l).collect();
+    // Line 4: Vec::new; line 5: format!; line 6: .to_vec and .clone;
+    // line 7: .collect. Lines 1 and 11 are outside the fence.
+    assert_eq!(got, vec![4, 5, 6, 6, 7]);
+}
+
+#[test]
+fn l2_alloc_ok_waiver_suppresses() {
+    let src = "// lint: hot-path\n\
+               fn hot() {\n\
+                   // lint: alloc-ok\n\
+                   let v: Vec<u32> = Vec::new();\n\
+                   drop(v);\n\
+               }\n\
+               // lint: end-hot-path\n";
+    let f = lint_sources(&files(&[("sim/fx.rs", src)]));
+    assert!(lines_of(&f, Rule::HotPathAlloc).is_empty(), "{f:?}");
+}
+
+#[test]
+fn l2_unbalanced_and_unknown_directives_are_findings() {
+    let unclosed = lint_sources(&files(&[("sim/a.rs", "// lint: hot-path\nfn a() {}\n")]));
+    assert_eq!(unclosed.len(), 1);
+    assert!(unclosed[0].message.contains("never closed"));
+
+    let stray = lint_sources(&files(&[("sim/b.rs", "fn a() {}\n// lint: end-hot-path\n")]));
+    assert_eq!(stray.len(), 1);
+    assert!(stray[0].message.contains("without a matching"));
+
+    let typo = lint_sources(&files(&[("sim/c.rs", "// lint: hotpath\nfn a() {}\n")]));
+    assert_eq!(typo.len(), 1);
+    assert!(typo[0].message.contains("unknown lint directive"));
+}
+
+// ---------------------------------------------------------------- L3
+
+#[test]
+fn l3_fires_on_lock_and_channel_unwraps_in_coordinator() {
+    let src = "use std::sync::{Mutex, mpsc::Receiver};\n\
+               fn a(m: &Mutex<u32>, rx: &Receiver<u32>) {\n\
+                   let g = m.lock().unwrap();\n\
+                   let v = rx.recv().expect(\"worker died\");\n\
+                   drop((g, v));\n\
+               }\n";
+    let f = lint_sources(&files(&[("coordinator/fx.rs", src)]));
+    let got: Vec<u32> = lines_of(&f, Rule::PanicHygiene).iter().map(|(_, l)| *l).collect();
+    assert_eq!(got, vec![3, 4]);
+}
+
+#[test]
+fn l3_silent_on_handled_results_and_outside_coordinator() {
+    let handled = "use std::sync::Mutex;\n\
+                   fn a(m: &Mutex<u32>) {\n\
+                       match m.lock() { Ok(g) => drop(g), Err(p) => drop(p.into_inner()) }\n\
+                       let _ = m.lock().unwrap_or_else(|p| p.into_inner());\n\
+                   }\n";
+    assert!(lint_sources(&files(&[("coordinator/fx.rs", handled)])).is_empty());
+
+    let unwrap = "fn a(m: &std::sync::Mutex<u32>) { let _ = m.lock().unwrap(); }\n";
+    assert!(lint_sources(&files(&[("sim/fx.rs", unwrap)]))
+        .iter()
+        .all(|f| f.rule != Rule::PanicHygiene));
+}
+
+#[test]
+fn l3_may_panic_waiver_suppresses() {
+    let src = "// lint: may-panic\n\
+               fn a(m: &std::sync::Mutex<u32>) { let _ = m.lock().unwrap(); }\n";
+    assert!(lint_sources(&files(&[("coordinator/fx.rs", src)])).is_empty());
+}
+
+// ---------------------------------------------------------------- L4
+
+#[test]
+fn l4_flags_unhandled_variants_per_exporter() {
+    let fx = files(&[
+        (
+            "obs/mod.rs",
+            "pub enum TraceEvent {\n    JobArrive { t: u64 },\n    #[allow(dead_code)]\n    CacheHit { worker: u16 },\n    BatchFormed(u16),\n}\n",
+        ),
+        (
+            "obs/chrome.rs",
+            "fn f(e: &TraceEvent) { match e {\n TraceEvent::JobArrive { .. } => {}\n TraceEvent::CacheHit { .. } => {}\n TraceEvent::BatchFormed(_) => {}\n} }\n",
+        ),
+        ("obs/prom.rs", "fn f(e: &TraceEvent) { if let TraceEvent::JobArrive { .. } = e {} }\n"),
+    ]);
+    let f = lint_sources(&fx);
+    let l4 = lines_of(&f, Rule::ExporterExhaustive);
+    assert_eq!(l4.len(), 2, "{f:?}");
+    assert!(l4.iter().all(|(file, _)| file == "obs/prom.rs"));
+    assert!(f.iter().any(|x| x.message.contains("TraceEvent::CacheHit")));
+    assert!(f.iter().any(|x| x.message.contains("TraceEvent::BatchFormed")));
+}
+
+#[test]
+fn l4_clean_when_both_exporters_cover_all_variants() {
+    let fx = files(&[
+        ("obs/mod.rs", "pub enum TraceEvent { A { t: u64 }, B(u16) }\n"),
+        ("obs/chrome.rs", "fn f(e: &TraceEvent) { match e { TraceEvent::A { .. } => {} TraceEvent::B(_) => {} } }\n"),
+        ("obs/prom.rs", "fn g(e: &TraceEvent) { match e { TraceEvent::A { .. } => \"a\", TraceEvent::B(_) => \"b\" }; }\n"),
+    ]);
+    let f = lint_sources(&fx);
+    assert!(lines_of(&f, Rule::ExporterExhaustive).is_empty(), "{f:?}");
+}
+
+// ---------------------------------------------------------------- L5
+
+#[test]
+fn l5_fires_on_raw_partial_cmp_unwrap_everywhere() {
+    let src = "fn s(v: &mut [f64]) {\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   v.sort_by(|a, b| a.partial_cmp(b).expect(\"nan\"));\n\
+               }\n";
+    for dir in ["util", "sim", "coordinator"] {
+        let f = lint_sources(&files(&[(&format!("{dir}/fx.rs"), src)]));
+        let got: Vec<u32> = lines_of(&f, Rule::FloatOrdering).iter().map(|(_, l)| *l).collect();
+        assert_eq!(got, vec![2, 3], "L5 in {dir}/");
+    }
+}
+
+#[test]
+fn l5_ignores_trait_impls_and_honors_waiver() {
+    let imp = "impl PartialOrd for S {\n\
+                   fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> { Some(self.cmp(o)) }\n\
+               }\n";
+    assert!(lint_sources(&files(&[("sim/fx.rs", imp)])).is_empty());
+
+    let waived = "fn s(v: &mut [f64]) {\n\
+                      // lint: total-order\n\
+                      v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                  }\n";
+    assert!(lint_sources(&files(&[("sim/fx.rs", waived)])).is_empty());
+}
+
+// ------------------------------------------------------- self-hosting
+
+/// The tentpole acceptance gate, enforced from `cargo test` itself: the
+/// crate's own sources must produce zero findings. CI additionally runs
+/// `cargo run --release -- lint` as a separate job.
+#[test]
+fn crate_sources_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&root).expect("lint_tree walks src/");
+    assert!(report.files_scanned >= 30, "expected the full tree, saw {}", report.files_scanned);
+    assert!(report.clean(), "compass-lint findings in tree:\n{}", report.render());
+}
+
+/// The real exporter-exhaustiveness invariant, checked against the real
+/// sources: obs/mod.rs's TraceEvent enum parses to the 15 known variants.
+#[test]
+fn l4_sees_the_real_trace_event_enum() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let src = std::fs::read_to_string(root.join("obs/mod.rs")).expect("obs/mod.rs");
+    let scanned = compass::lint::scan::scan(&src);
+    let variants = compass::lint::rules::enum_variants(&scanned.toks, "TraceEvent");
+    let names: Vec<&str> = variants.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "JobArrive",
+            "JobComplete",
+            "TaskEnqueue",
+            "ExecStart",
+            "ExecEnd",
+            "FetchStart",
+            "FetchEnd",
+            "Decision",
+            "CacheHit",
+            "CacheMiss",
+            "CacheInsert",
+            "CacheEvict",
+            "SstStaleness",
+            "BatchFormed",
+            "BatchExecuted",
+        ]
+    );
+}
+
+/// Findings across several files come back sorted by (file, line) so the
+/// report (and the CI log) is stable run to run.
+#[test]
+fn findings_are_reported_in_stable_order() {
+    let fx = files(&[
+        ("sim/z.rs", "use std::collections::HashMap;\nuse std::time::Instant;\n"),
+        ("obs/a.rs", "use std::collections::HashSet;\n"),
+    ]);
+    let f = lint_sources(&fx);
+    let order: Vec<(String, u32)> = f.iter().map(|x| (x.file.clone(), x.line)).collect();
+    assert_eq!(
+        order,
+        vec![
+            ("obs/a.rs".to_string(), 1),
+            ("sim/z.rs".to_string(), 1),
+            ("sim/z.rs".to_string(), 2),
+        ]
+    );
+}
