@@ -5,6 +5,7 @@
 //! loads a simple `key = value` config file (TOML-subset) for deployments.
 
 use crate::core::{Micros, GB, MS};
+use crate::fault::FaultConfig;
 use crate::gpu::EvictionPolicy;
 use crate::net::CostModel;
 use crate::obs::TraceConfig;
@@ -106,6 +107,9 @@ pub struct ClusterConfig {
     /// Structured event tracing (see `obs`); disabled by default so the
     /// hot paths pay only a branch.
     pub trace: TraceConfig,
+    /// Fault injection + recovery (DESIGN.md §9); fully disabled by
+    /// default, in which case the whole subsystem is inert.
+    pub fault: FaultConfig,
 }
 
 impl Default for ClusterConfig {
@@ -127,6 +131,7 @@ impl Default for ClusterConfig {
             straggler_factor: 4.0,
             seed: 0xC0FFEE,
             trace: TraceConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -210,6 +215,26 @@ impl ClusterConfig {
                 "seed" => cfg.seed = v.parse()?,
                 "trace" => cfg.trace.enabled = v.parse()?,
                 "trace_capacity" => cfg.trace.capacity = v.parse()?,
+                "fault_crash_rate" => cfg.fault.crash_rate = v.parse()?,
+                "fault_crash" => cfg.fault.crashes = crate::fault::parse_crash_spec(v)?,
+                "fault_crash_window_ms" => {
+                    cfg.fault.crash_window_us = v.parse::<u64>()? * MS
+                }
+                "fault_slowdown_rate" => cfg.fault.slowdown_rate = v.parse()?,
+                "fault_slowdown_factor" => cfg.fault.slowdown_factor = v.parse()?,
+                "fault_slowdown_ms" => cfg.fault.slowdown_us = v.parse::<u64>()? * MS,
+                "fault_drop_prob" => cfg.fault.drop_prob = v.parse()?,
+                "fault_delay_prob" => cfg.fault.delay_prob = v.parse()?,
+                "fault_delay_ms" => cfg.fault.delay_us = v.parse::<u64>()? * MS,
+                "fault_fetch_fail_prob" => cfg.fault.fetch_fail_prob = v.parse()?,
+                "fault_retry_attempts" => cfg.fault.retry.max_attempts = v.parse()?,
+                "fault_retry_backoff_ms" => {
+                    cfg.fault.retry.backoff_base_us = v.parse::<u64>()? * MS
+                }
+                "fault_heartbeat_timeout_ms" => {
+                    cfg.fault.heartbeat_timeout_us = v.parse::<u64>()? * MS
+                }
+                "fault_seed" => cfg.fault.seed = v.parse()?,
                 other => anyhow::bail!("line {}: unknown key '{other}'", lineno + 1),
             }
         }
@@ -279,6 +304,30 @@ mod tests {
         assert_eq!(c.cost.batch.window_us, 500);
         assert_eq!(c.cost.batch.alpha_override, Some(0.4));
         assert!(c.cost.batch.enabled());
+    }
+
+    #[test]
+    fn kv_file_fault_keys() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("compass_faultcfg_{}.toml", std::process::id()));
+        std::fs::write(
+            &path,
+            "fault_crash_rate = 0.25\nfault_crash = \"0@1500,2@3000\"\n\
+             fault_heartbeat_timeout_ms = 900\nfault_fetch_fail_prob = 0.1\n\
+             fault_retry_attempts = 5\nfault_retry_backoff_ms = 20\nfault_seed = 77\n",
+        )
+        .unwrap();
+        let c = ClusterConfig::from_kv_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(c.fault.crash_rate, 0.25);
+        assert_eq!(c.fault.crashes, vec![(0, 1500 * MS), (2, 3000 * MS)]);
+        assert_eq!(c.fault.heartbeat_timeout_us, 900 * MS);
+        assert_eq!(c.fault.fetch_fail_prob, 0.1);
+        assert_eq!(c.fault.retry.max_attempts, 5);
+        assert_eq!(c.fault.retry.backoff_base_us, 20 * MS);
+        assert_eq!(c.fault.seed, 77);
+        assert!(c.fault.enabled());
+        assert!(!ClusterConfig::default().fault.enabled());
     }
 
     #[test]

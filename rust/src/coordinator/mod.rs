@@ -70,6 +70,7 @@ pub fn cli_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(a) = args.get("batch-alpha") {
         cfg.cost.batch.alpha_override = Some(a.parse()?);
     }
+    crate::fault::apply_fault_args(&mut cfg.fault, args)?;
     let rate = args.get_f64("rate", 2.0);
     let n_jobs = args.get_usize("jobs", 40);
     let seed = cfg.seed ^ 0x9e37;
@@ -99,6 +100,16 @@ pub fn cli_serve(args: &Args) -> anyhow::Result<()> {
         report.pjrt_executions,
         report.mean_pjrt_exec_us,
     );
+    if m.faults != crate::metrics::FaultStats::default() {
+        println!(
+            "faults: {} workers failed | {} tasks re-placed | {} retries | {} jobs failed | completion {:.1}%",
+            m.faults.workers_failed,
+            m.faults.tasks_re_placed,
+            m.faults.task_retries,
+            m.faults.jobs_failed,
+            m.completion_rate()
+        );
+    }
     crate::obs::write_outputs(
         &report.trace,
         &report.metrics,

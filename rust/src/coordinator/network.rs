@@ -6,6 +6,7 @@
 //! when the (scaled) transfer would have completed. Zero-delay messages are
 //! forwarded immediately, preserving sender order.
 
+use crate::fault::NetFaults;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::mpsc::{Receiver, Sender};
@@ -19,9 +20,20 @@ pub struct Parcel<M> {
 }
 
 /// Fabric thread main loop: deliver parcels in deadline order.
-pub fn run_fabric<M: Send + 'static>(
+pub fn run_fabric<M: Send + 'static>(rx: Receiver<Parcel<M>>, outs: Vec<Sender<M>>) {
+    run_fabric_faults(rx, outs, None)
+}
+
+/// `run_fabric` with an optional fault-injection shim: each accepted
+/// parcel may pay extra delivery latency (a modeled drop-and-retransmit
+/// or a delay spike). Faults apply in arrival order — one RNG draw per
+/// parcel — so the injected latency stream is deterministic for a given
+/// seed. The shim's delays are wall-clock `Micros` (the caller pre-scales
+/// profiled time; the fabric has no notion of `time_scale`).
+pub fn run_fabric_faults<M: Send + 'static>(
     rx: Receiver<Parcel<M>>,
     outs: Vec<Sender<M>>,
+    mut faults: Option<NetFaults>,
 ) {
     struct Pending<M> {
         at: Instant,
@@ -57,8 +69,12 @@ pub fn run_fabric<M: Send + 'static>(
         match rx.recv_timeout(timeout) {
             Ok(parcel) => {
                 seq += 1;
+                let extra = match &mut faults {
+                    Some(nf) => Duration::from_micros(nf.extra_delay_us()),
+                    None => Duration::ZERO,
+                };
                 heap.push(Reverse(Pending {
-                    at: Instant::now() + parcel.delay,
+                    at: Instant::now() + parcel.delay + extra,
                     seq,
                     to: parcel.to,
                     msg: parcel.msg,
@@ -120,6 +136,30 @@ mod tests {
         let got: Vec<u32> = (0..20).map(|_| out_rx.recv().unwrap()).collect();
         h.join().unwrap();
         assert_eq!(got, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fault_shim_adds_latency_but_loses_nothing() {
+        use crate::fault::FaultConfig;
+        // delay_prob 1.0: every parcel pays delay_us extra, none are lost.
+        let cfg = FaultConfig {
+            delay_prob: 1.0,
+            delay_us: 5_000, // 5ms wall
+            ..Default::default()
+        };
+        let nf = cfg.net_faults().expect("net faults configured");
+        let (tx, rx) = channel::<Parcel<u32>>();
+        let (out_tx, out_rx) = channel::<u32>();
+        let h = std::thread::spawn(move || run_fabric_faults(rx, vec![out_tx], Some(nf)));
+        let t0 = Instant::now();
+        for i in 0..8 {
+            tx.send(Parcel { to: 0, delay: Duration::ZERO, msg: i }).unwrap();
+        }
+        drop(tx);
+        let got: Vec<u32> = (0..8).map(|_| out_rx.recv().unwrap()).collect();
+        h.join().unwrap();
+        assert_eq!(got, (0..8).collect::<Vec<_>>(), "a dropped message still retransmits");
+        assert!(t0.elapsed() >= Duration::from_millis(5), "delay faults add latency");
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Chaos sweep — scheduler robustness under injected worker crashes.
+//!
+//! Runs the Compass scheduler on the standard 4-pipeline mix while sweeping
+//! the per-worker crash probability (DESIGN.md §9), reporting what the
+//! recovery machinery delivers at each point: completion rate, p99 latency
+//! of the jobs that did finish, and the raw fault counters (workers failed,
+//! tasks re-placed, degraded jobs). Expected shape: completion stays at
+//! 100% while any worker survives — crashes cost latency (re-placed tails)
+//! and degraded outcomes, not results — and only collapses when the crash
+//! rate kills the whole cluster.
+//!
+//! `run` also writes `BENCH_chaos.json` so CI can gate on the two
+//! structural invariants (100% completion at rate 0; nonzero re-placement
+//! activity once crashes are injected) and archive the curve.
+
+use super::{Runner, Scale};
+use crate::config::{ClusterConfig, SchedulerKind};
+use crate::metrics::MetricsSink;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::table;
+use crate::workload;
+use crate::Simulator;
+use std::collections::BTreeMap;
+
+/// Request rate for the sweep: the paper's Fig. 6b high-load operating
+/// point, so crashes land on a cluster with real queues to orphan.
+const SWEEP_RATE: f64 = 2.0;
+
+/// Swept per-worker crash probabilities. The top cell expects most of the
+/// five default workers dead before the run ends.
+const CRASH_RATES: [f64; 4] = [0.0, 0.2, 0.4, 0.8];
+
+/// One sweep cell, in `CRASH_RATES` order.
+pub struct ChaosCell {
+    pub crash_rate: f64,
+    pub completion_rate: f64,
+    pub p99_latency_s: f64,
+    pub workers_failed: u64,
+    pub tasks_re_placed: u64,
+    pub degraded_jobs: usize,
+    pub jobs_failed: u64,
+}
+
+pub struct ChaosSweepResult {
+    pub cells: Vec<ChaosCell>,
+}
+
+impl ChaosSweepResult {
+    pub fn cell_at(&self, crash_rate: f64) -> &ChaosCell {
+        self.cells
+            .iter()
+            .find(|c| c.crash_rate == crash_rate)
+            .expect("swept crash rate")
+    }
+
+    /// Re-placements summed over every crash-injecting cell — what the CI
+    /// gate checks is nonzero.
+    pub fn total_re_placed(&self) -> u64 {
+        self.cells.iter().filter(|c| c.crash_rate > 0.0).map(|c| c.tasks_re_placed).sum()
+    }
+
+    fn to_json(&self) -> Json {
+        let rows = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("crash_rate".to_string(), Json::Num(c.crash_rate));
+                o.insert("completion_rate".to_string(), Json::Num(c.completion_rate));
+                o.insert("p99_latency_s".to_string(), Json::Num(c.p99_latency_s));
+                o.insert("workers_failed".to_string(), Json::Num(c.workers_failed as f64));
+                o.insert("tasks_re_placed".to_string(), Json::Num(c.tasks_re_placed as f64));
+                o.insert("degraded_jobs".to_string(), Json::Num(c.degraded_jobs as f64));
+                o.insert("jobs_failed".to_string(), Json::Num(c.jobs_failed as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("chaos".to_string(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+}
+
+fn scenario(crash_rate: f64, scale: Scale) -> MetricsSink {
+    let mut cfg =
+        ClusterConfig::default().with_scheduler(SchedulerKind::Compass).with_seed(scale.seed);
+    cfg.fault.crash_rate = crash_rate;
+    // Identical request stream in every cell: only the fault plan varies.
+    let jobs = workload::poisson(SWEEP_RATE, scale.jobs, &[], scale.seed ^ 0x9e37_79b9);
+    Simulator::simulate(cfg, jobs).metrics
+}
+
+/// Every cell is an independent run: fan them across the runner's pool.
+/// Results come back in sweep order, so output is identical at any thread
+/// count (the experiments-smoke serial-vs-parallel diff covers this).
+pub fn compute_sweep(runner: &Runner, scale: Scale) -> ChaosSweepResult {
+    let rates: Vec<f64> = CRASH_RATES.to_vec();
+    let cells = runner.par_map(&rates, |_, &crash_rate| {
+        let m = scenario(crash_rate, scale);
+        let lat = m.latencies_s();
+        ChaosCell {
+            crash_rate,
+            completion_rate: m.completion_rate(),
+            p99_latency_s: if lat.is_empty() { 0.0 } else { percentile(&lat, 99.0) },
+            workers_failed: m.faults.workers_failed,
+            tasks_re_placed: m.faults.tasks_re_placed,
+            degraded_jobs: m.degraded_jobs(),
+            jobs_failed: m.faults.jobs_failed,
+        }
+    });
+    ChaosSweepResult { cells }
+}
+
+pub fn run(scale: Scale) -> ChaosSweepResult {
+    let result = compute_sweep(&Runner::from_env(), scale);
+
+    println!("\n=== Chaos sweep — completion/p99 vs crash rate, {SWEEP_RATE} req/s ===\n");
+    let mut rows = Vec::new();
+    for c in &result.cells {
+        rows.push(vec![
+            format!("{:.1}", c.crash_rate),
+            format!("{:.1}", c.completion_rate),
+            format!("{:.3}", c.p99_latency_s),
+            format!("{}", c.workers_failed),
+            format!("{}", c.tasks_re_placed),
+            format!("{}", c.degraded_jobs),
+            format!("{}", c.jobs_failed),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "crash_rate",
+                "completion %",
+                "p99 latency s",
+                "workers failed",
+                "re-placed",
+                "degraded",
+                "jobs failed"
+            ],
+            &rows
+        )
+    );
+    let path = "BENCH_chaos.json";
+    match std::fs::write(path, format!("{}\n", result.to_json())) {
+        Ok(()) => println!("chaos report written to {path}"),
+        Err(e) => eprintln!("chaos report not written to {path}: {e}"),
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_sweep_is_deterministic_and_recovers() {
+        let scale = Scale { jobs: 60, seed: 17 };
+        let serial = compute_sweep(&Runner::serial(), scale);
+        let parallel = compute_sweep(&Runner::from_env(), scale);
+        assert_eq!(serial.cells.len(), CRASH_RATES.len());
+        for (a, b) in serial.cells.iter().zip(parallel.cells.iter()) {
+            assert_eq!(a.crash_rate.to_bits(), b.crash_rate.to_bits());
+            assert_eq!(a.completion_rate.to_bits(), b.completion_rate.to_bits());
+            assert_eq!(a.p99_latency_s.to_bits(), b.p99_latency_s.to_bits());
+            assert_eq!(a.tasks_re_placed, b.tasks_re_placed);
+            assert_eq!(a.workers_failed, b.workers_failed);
+        }
+        let baseline = serial.cell_at(0.0);
+        assert_eq!(baseline.completion_rate, 100.0, "no crashes, no losses");
+        assert_eq!(baseline.workers_failed, 0);
+        assert_eq!(baseline.tasks_re_placed, 0);
+        assert!(
+            serial.total_re_placed() > 0,
+            "crash injection must exercise recovery re-placement"
+        );
+    }
+}

@@ -11,9 +11,11 @@
 //! | fig9     | Fig. 9 (production-trace replay)                     |
 //! | fig10    | Fig. 10 (scalability: Compass vs Hash, 5..250 workers)|
 //! | batch    | execute-path batching sweep (batch_max 1..8)         |
+//! | chaos    | crash-rate sweep: completion/p99 under fault injection|
 //! | validate | §5.4 simulator-vs-live validation                    |
 
 pub mod batch;
+pub mod chaos;
 pub mod fig10;
 pub mod fig6;
 pub mod fig7;
@@ -117,6 +119,9 @@ pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
         "batch" => {
             batch::run(scale);
         }
+        "chaos" => {
+            chaos::run(scale);
+        }
         "all" => {
             fig6::boxes(0.5, scale, "Figure 6a — low load (0.5 req/s)");
             fig6::boxes(2.0, scale, "Figure 6b — high load (2 req/s)");
@@ -127,6 +132,7 @@ pub fn run(which: &str, args: &Args) -> anyhow::Result<()> {
             fig9::run(scale);
             fig10::run(scale, args.flag("quick"));
             batch::run(scale);
+            chaos::run(scale);
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }

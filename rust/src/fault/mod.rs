@@ -1,0 +1,424 @@
+//! Deterministic fault injection and recovery policy (DESIGN.md §9).
+//!
+//! Compass is a *decentralized* scheduler, so its failure story has no
+//! central coordinator either: every worker watches the same SST rows it
+//! already receives for scheduling, declares a peer dead when that peer's
+//! row goes stale past a threshold (missed heartbeats), poisons the row so
+//! all four schedulers mask the worker out, and re-places the orphaned
+//! tasks through the ordinary Algorithm 1/2 machinery.
+//!
+//! Everything here is policy and plumbing shared by both execution paths:
+//!
+//! * [`FaultConfig`] — the config/CLI-facing knobs (crash rate or explicit
+//!   `w@ms` crashes, transient slowdown, message drop/delay, model-fetch
+//!   failure, retry/backoff, heartbeat staleness threshold, fault seed).
+//! * [`FaultPlan`] — the *materialized* schedule of worker crashes and
+//!   slowdown windows, sampled once up front from a dedicated SplitMix64
+//!   stream so a plan is a pure function of `(FaultConfig, n_workers)`:
+//!   the simulator turns it into first-class events, the live cluster
+//!   hands each worker thread its own crash time.
+//! * [`NetFaults`] — the message drop/delay shim consumed by
+//!   `coordinator::network::run_fabric_faults`.
+//!
+//! Determinism contract: the fault streams are seeded independently of the
+//! workload seed (`seed ^ 0xFA01` for the plan, `^ 0xFA02` / `^ 0xFA03`
+//! for the online sim/fabric draws), and a *disabled* config draws nothing
+//! at all — an empty plan leaves the simulator byte-identical to the
+//! failure-free build (locked by `tests/prop_faults.rs`).
+
+use crate::core::{Micros, WorkerId, MS, SEC};
+use crate::util::args::Args;
+use crate::util::rng::Rng;
+
+/// Bounded-retry policy for transient failures (model fetch today; any
+/// retryable step tomorrow). Exponential backoff: attempt `a` waits
+/// `backoff_base_us << a` before trying again.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryConfig {
+    /// Total attempts including the first (so 3 = one try + two retries).
+    pub max_attempts: u32,
+    /// Backoff before retry 1; doubles per further attempt.
+    pub backoff_base_us: Micros,
+}
+
+impl Default for RetryConfig {
+    fn default() -> RetryConfig {
+        RetryConfig { max_attempts: 3, backoff_base_us: 50 * MS }
+    }
+}
+
+impl RetryConfig {
+    /// Backoff to wait after failed attempt `attempt` (0-based).
+    #[inline]
+    pub fn backoff_us(&self, attempt: u32) -> Micros {
+        self.backoff_base_us.saturating_mul(1u64 << attempt.min(16))
+    }
+}
+
+/// All fault-injection knobs. The default is fully disabled: every rate is
+/// zero and no explicit crash is listed, which the rest of the system takes
+/// as "inject nothing, draw nothing, change nothing".
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Per-worker probability of one crash inside `[0, crash_window_us)`.
+    pub crash_rate: f64,
+    /// Explicit crashes `(worker, at_us)`, unioned with the sampled set
+    /// (earliest time wins if both name the same worker).
+    pub crashes: Vec<(WorkerId, Micros)>,
+    /// Window in which sampled crash times fall.
+    pub crash_window_us: Micros,
+    /// Per-worker probability of one transient slowdown window.
+    pub slowdown_rate: f64,
+    /// Runtime multiplier while a slowdown window is active (> 1).
+    pub slowdown_factor: f64,
+    /// Length of a slowdown window.
+    pub slowdown_us: Micros,
+    /// Probability a fabric message is "dropped". Transport is reliable
+    /// (in-process channels), so a drop is modeled as the retransmit it
+    /// would trigger: the message arrives late, never never-arrives.
+    pub drop_prob: f64,
+    /// Probability a fabric message is delayed by `delay_us`.
+    pub delay_prob: f64,
+    /// Extra latency charged to a delayed message.
+    pub delay_us: Micros,
+    /// Per-attempt probability a model fetch fails transiently.
+    pub fetch_fail_prob: f64,
+    /// Bounded retry + exponential backoff for transient failures.
+    pub retry: RetryConfig,
+    /// A worker whose SST row is staler than this is declared dead
+    /// (heartbeats ride the existing SST pushes; see DESIGN.md §9).
+    pub heartbeat_timeout_us: Micros,
+    /// Fault-stream seed, independent of the workload seed.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            crash_rate: 0.0,
+            crashes: Vec::new(),
+            crash_window_us: 20 * SEC,
+            slowdown_rate: 0.0,
+            slowdown_factor: 3.0,
+            slowdown_us: 2 * SEC,
+            drop_prob: 0.0,
+            delay_prob: 0.0,
+            delay_us: 20 * MS,
+            fetch_fail_prob: 0.0,
+            retry: RetryConfig::default(),
+            // Three missed 200 ms SST pushes.
+            heartbeat_timeout_us: 600 * MS,
+            seed: 0xFA17,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Any injection at all? When false the whole subsystem must be inert:
+    /// no RNG draws, no events, no extra branches taken.
+    pub fn enabled(&self) -> bool {
+        self.crash_rate > 0.0
+            || !self.crashes.is_empty()
+            || self.slowdown_rate > 0.0
+            || self.net_enabled()
+            || self.fetch_fail_prob > 0.0
+    }
+
+    /// Any fabric-level fault (drop/delay)?
+    pub fn net_enabled(&self) -> bool {
+        self.drop_prob > 0.0 || self.delay_prob > 0.0
+    }
+
+    /// Build the fabric injection shim, if fabric faults are configured.
+    pub fn net_faults(&self) -> Option<NetFaults> {
+        if !self.net_enabled() {
+            return None;
+        }
+        Some(NetFaults {
+            drop_prob: self.drop_prob,
+            delay_prob: self.delay_prob,
+            delay_us: self.delay_us,
+            retransmit_us: self.retry.backoff_base_us,
+            rng: Rng::new(self.seed ^ 0xFA03),
+        })
+    }
+}
+
+/// One transient slowdown window: runtimes on the worker are multiplied by
+/// `factor` while `start_us <= now < end_us`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowdownWindow {
+    pub start_us: Micros,
+    pub end_us: Micros,
+    pub factor: f64,
+}
+
+/// The materialized fault schedule: what will actually happen, per worker.
+/// A pure function of `(FaultConfig, n_workers)` — both execution paths
+/// materialize the same plan and therefore kill the same workers at the
+/// same (virtual) times.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Per-worker crash time; `None` = survives the run.
+    pub crash_at: Vec<Option<Micros>>,
+    /// Per-worker slowdown window, if any.
+    pub slowdowns: Vec<Option<SlowdownWindow>>,
+}
+
+impl FaultPlan {
+    /// An empty plan for `n` workers (nothing ever happens).
+    pub fn none(n: usize) -> FaultPlan {
+        FaultPlan { crash_at: vec![None; n], slowdowns: vec![None; n] }
+    }
+
+    /// Sample the plan from the config's dedicated fault stream. Every
+    /// worker consumes a fixed number of draws regardless of outcome, so
+    /// nudging one rate never reshuffles another worker's fate.
+    pub fn materialize(cfg: &FaultConfig, n_workers: usize) -> FaultPlan {
+        let mut plan = FaultPlan::none(n_workers);
+        if !cfg.enabled() {
+            return plan;
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xFA01);
+        for w in 0..n_workers {
+            let (crash_roll, crash_frac) = (rng.f64(), rng.f64());
+            if cfg.crash_rate > 0.0 && crash_roll < cfg.crash_rate {
+                plan.crash_at[w] = Some((crash_frac * cfg.crash_window_us as f64) as Micros);
+            }
+            let (slow_roll, slow_frac) = (rng.f64(), rng.f64());
+            if cfg.slowdown_rate > 0.0 && slow_roll < cfg.slowdown_rate {
+                let start = (slow_frac * cfg.crash_window_us as f64) as Micros;
+                plan.slowdowns[w] = Some(SlowdownWindow {
+                    start_us: start,
+                    end_us: start + cfg.slowdown_us,
+                    factor: cfg.slowdown_factor,
+                });
+            }
+        }
+        // Safety valve on the *sampled* set: a high crash rate must not
+        // silently kill the whole cluster. Spare the latest crasher so at
+        // least one worker survives to detect and finish. Explicit `w@ms`
+        // crashes are applied afterwards and may still kill everyone —
+        // that is how the `Failed` outcome path is exercised.
+        if n_workers > 0 && plan.crash_at.iter().all(|c| c.is_some()) {
+            let last = (0..n_workers)
+                .max_by_key(|&w| plan.crash_at[w].unwrap_or(0))
+                .unwrap_or(0);
+            plan.crash_at[last] = None;
+        }
+        for &(w, at) in &cfg.crashes {
+            if w >= n_workers {
+                continue;
+            }
+            plan.crash_at[w] = Some(match plan.crash_at[w] {
+                Some(prev) => prev.min(at),
+                None => at,
+            });
+        }
+        plan
+    }
+
+    /// Any worker scheduled to crash?
+    pub fn has_crashes(&self) -> bool {
+        self.crash_at.iter().any(|c| c.is_some())
+    }
+
+    /// Any slowdown window scheduled?
+    pub fn has_slowdowns(&self) -> bool {
+        self.slowdowns.iter().any(|s| s.is_some())
+    }
+
+    /// Runtime multiplier for worker `w` at time `now`, if a slowdown
+    /// window is active.
+    #[inline]
+    pub fn slowdown_factor(&self, w: WorkerId, now: Micros) -> Option<f64> {
+        match self.slowdowns.get(w).copied().flatten() {
+            Some(win) if win.start_us <= now && now < win.end_us => Some(win.factor),
+            _ => None,
+        }
+    }
+}
+
+/// Message-level fault shim for the live fabric
+/// (`coordinator::network::run_fabric_faults`). The fabric thread applies
+/// it to each parcel as it is accepted, in arrival order, so the extra
+/// latency stream is deterministic for a given seed.
+#[derive(Debug, Clone)]
+pub struct NetFaults {
+    pub drop_prob: f64,
+    pub delay_prob: f64,
+    pub delay_us: Micros,
+    /// Latency a "dropped" message pays for its retransmit.
+    pub retransmit_us: Micros,
+    rng: Rng,
+}
+
+impl NetFaults {
+    /// Extra delivery latency for the next message: retransmit cost if it
+    /// is dropped, `delay_us` if it is delayed, 0 otherwise. Exactly one
+    /// draw per message keeps the stream stable.
+    pub fn extra_delay_us(&mut self) -> Micros {
+        let roll = self.rng.f64();
+        if roll < self.drop_prob {
+            self.retransmit_us
+        } else if roll < self.drop_prob + self.delay_prob {
+            self.delay_us
+        } else {
+            0
+        }
+    }
+}
+
+/// Apply the shared `--crash-rate`/`--crash`/... CLI flags onto a
+/// [`FaultConfig`]. Used by `simulate`, `serve`, and `experiment chaos` so
+/// the knobs spell identically everywhere.
+pub fn apply_fault_args(cfg: &mut FaultConfig, args: &Args) -> anyhow::Result<()> {
+    cfg.crash_rate = args.get_f64("crash-rate", cfg.crash_rate);
+    if let Some(spec) = args.get("crash") {
+        cfg.crashes = parse_crash_spec(spec)?;
+    }
+    cfg.crash_window_us = args.get_u64("crash-window-ms", cfg.crash_window_us / MS) * MS;
+    cfg.slowdown_rate = args.get_f64("slowdown-rate", cfg.slowdown_rate);
+    cfg.slowdown_factor = args.get_f64("slowdown-factor", cfg.slowdown_factor);
+    cfg.drop_prob = args.get_f64("drop-prob", cfg.drop_prob);
+    cfg.delay_prob = args.get_f64("delay-prob", cfg.delay_prob);
+    cfg.fetch_fail_prob = args.get_f64("fetch-fail-prob", cfg.fetch_fail_prob);
+    cfg.heartbeat_timeout_us =
+        args.get_u64("heartbeat-timeout-ms", cfg.heartbeat_timeout_us / MS) * MS;
+    cfg.seed = args.get_u64("fault-seed", cfg.seed);
+    Ok(())
+}
+
+/// Parse a comma-separated `worker@ms` crash list, e.g. `0@1500,2@3000`.
+pub fn parse_crash_spec(spec: &str) -> anyhow::Result<Vec<(WorkerId, Micros)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (w, ms) = part
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("bad crash spec {part:?}: want WORKER@MS"))?;
+        let w: WorkerId =
+            w.trim().parse().map_err(|e| anyhow::anyhow!("bad worker in {part:?}: {e}"))?;
+        let ms: u64 =
+            ms.trim().parse().map_err(|e| anyhow::anyhow!("bad time in {part:?}: {e}"))?;
+        out.push((w, ms * MS));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inert() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        assert!(cfg.net_faults().is_none());
+        let plan = FaultPlan::materialize(&cfg, 5);
+        assert_eq!(plan, FaultPlan::none(5));
+        assert!(!plan.has_crashes());
+        assert!(!plan.has_slowdowns());
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let cfg = FaultConfig { crash_rate: 0.5, slowdown_rate: 0.5, ..Default::default() };
+        let a = FaultPlan::materialize(&cfg, 8);
+        let b = FaultPlan::materialize(&cfg, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sampled_crash_rate_one_spares_a_survivor() {
+        let cfg = FaultConfig { crash_rate: 1.0, ..Default::default() };
+        let plan = FaultPlan::materialize(&cfg, 6);
+        let alive = plan.crash_at.iter().filter(|c| c.is_none()).count();
+        assert_eq!(alive, 1, "safety valve spares exactly the latest crasher");
+        for c in plan.crash_at.iter().flatten() {
+            assert!(*c < cfg.crash_window_us);
+        }
+    }
+
+    #[test]
+    fn explicit_crashes_union_and_may_kill_all() {
+        let cfg = FaultConfig {
+            crashes: vec![(0, SEC), (1, 2 * SEC), (2, 3 * SEC), (9, SEC)],
+            ..Default::default()
+        };
+        let plan = FaultPlan::materialize(&cfg, 3);
+        assert_eq!(plan.crash_at, vec![Some(SEC), Some(2 * SEC), Some(3 * SEC)]);
+        // Worker 9 is out of range and ignored; all in-range workers die.
+        assert!(plan.has_crashes());
+    }
+
+    #[test]
+    fn explicit_crash_takes_earlier_time() {
+        // With crash_rate 1.0 every worker samples a time; an explicit
+        // earlier time must win, an explicit later one must lose.
+        let cfg = FaultConfig { crash_rate: 1.0, crashes: vec![(0, 0)], ..Default::default() };
+        let plan = FaultPlan::materialize(&cfg, 4);
+        assert_eq!(plan.crash_at[0], Some(0));
+    }
+
+    #[test]
+    fn slowdown_window_bounds() {
+        let cfg = FaultConfig { slowdown_rate: 1.0, ..Default::default() };
+        let plan = FaultPlan::materialize(&cfg, 4);
+        assert!(plan.has_slowdowns());
+        for (w, win) in plan.slowdowns.iter().enumerate() {
+            let win = win.expect("rate 1.0 slows every worker");
+            assert_eq!(win.end_us - win.start_us, cfg.slowdown_us);
+            assert_eq!(plan.slowdown_factor(w, win.start_us), Some(win.factor));
+            assert_eq!(plan.slowdown_factor(w, win.end_us), None);
+        }
+    }
+
+    #[test]
+    fn crash_rate_independent_of_slowdown_rate() {
+        // Fixed draw count per worker: toggling the slowdown rate must not
+        // change who crashes or when.
+        let a = FaultPlan::materialize(
+            &FaultConfig { crash_rate: 0.5, ..Default::default() },
+            8,
+        );
+        let b = FaultPlan::materialize(
+            &FaultConfig { crash_rate: 0.5, slowdown_rate: 0.9, ..Default::default() },
+            8,
+        );
+        assert_eq!(a.crash_at, b.crash_at);
+    }
+
+    #[test]
+    fn retry_backoff_doubles_and_saturates() {
+        let r = RetryConfig { max_attempts: 5, backoff_base_us: 100 };
+        assert_eq!(r.backoff_us(0), 100);
+        assert_eq!(r.backoff_us(1), 200);
+        assert_eq!(r.backoff_us(4), 1600);
+        // Huge attempt numbers clamp instead of overflowing.
+        assert_eq!(r.backoff_us(200), 100 << 16);
+        let big = RetryConfig { max_attempts: 3, backoff_base_us: Micros::MAX / 2 };
+        assert_eq!(big.backoff_us(63), Micros::MAX);
+    }
+
+    #[test]
+    fn net_faults_partition_the_unit_interval() {
+        let cfg = FaultConfig { drop_prob: 0.5, delay_prob: 0.5, ..Default::default() };
+        let mut nf = cfg.net_faults().expect("net faults configured");
+        for _ in 0..256 {
+            let d = nf.extra_delay_us();
+            assert!(d == nf.retransmit_us || d == nf.delay_us, "d={d}");
+        }
+        let cfg = FaultConfig { delay_prob: 1.0, ..Default::default() };
+        let mut nf = cfg.net_faults().expect("delay-only");
+        assert_eq!(nf.extra_delay_us(), cfg.delay_us);
+    }
+
+    #[test]
+    fn parse_crash_spec_roundtrip() {
+        assert_eq!(parse_crash_spec("0@1500,2@3000").unwrap(), vec![(0, 1500 * MS), (2, 3 * SEC)]);
+        assert_eq!(parse_crash_spec("").unwrap(), vec![]);
+        assert!(parse_crash_spec("1").is_err());
+        assert!(parse_crash_spec("x@5").is_err());
+        assert!(parse_crash_spec("1@x").is_err());
+    }
+}

@@ -17,6 +17,7 @@ pub mod coordinator;
 pub mod core;
 pub mod dfg;
 pub mod exp;
+pub mod fault;
 pub mod gpu;
 pub mod lint;
 pub mod metrics;

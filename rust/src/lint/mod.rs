@@ -9,7 +9,7 @@
 //! |------|-----------------------|-------------------------------|
 //! | L1   | determinism           | `sim/ sched/ exp/ obs/`       |
 //! | L2   | hot-path allocation   | `// lint: hot-path` fences    |
-//! | L3   | panic hygiene         | `coordinator/`                |
+//! | L3   | panic hygiene         | `coordinator/`, `fault/`      |
 //! | L4   | exporter exhaustive   | `obs/mod.rs` vs exporters     |
 //! | L5   | float ordering        | all of `src/`                 |
 //!

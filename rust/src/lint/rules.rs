@@ -13,7 +13,8 @@ pub enum Rule {
     Determinism,
     /// L2: no allocation inside `// lint: hot-path` fences.
     HotPathAlloc,
-    /// L3: no `unwrap`/`expect` on channel/lock results in `coordinator/`.
+    /// L3: no `unwrap`/`expect` on channel/lock results in `coordinator/`
+    /// or `fault/`.
     PanicHygiene,
     /// L4: every `obs::TraceEvent` variant handled by both exporters.
     ExporterExhaustive,
@@ -246,9 +247,10 @@ pub fn l2_hot_path(ctx: &FileCtx, out: &mut Vec<Finding>) {
 const L3_SOURCES: [&str; 7] =
     ["lock", "try_lock", "recv", "try_recv", "recv_timeout", "send", "join"];
 
-/// L3 panic hygiene: applies to `coordinator/` only.
+/// L3 panic hygiene: applies to `coordinator/` and `fault/` (fault policy
+/// is consumed by the live path, so it must degrade rather than die).
 pub fn l3_panic_hygiene(ctx: &FileCtx, out: &mut Vec<Finding>) {
-    if ctx.top_dir() != "coordinator" {
+    if !matches!(ctx.top_dir(), "coordinator" | "fault") {
         return;
     }
     let toks = &ctx.scanned.toks;
@@ -463,6 +465,9 @@ mod tests {
         let f = run_file("coordinator/a.rs", src);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, Rule::PanicHygiene);
+        // `fault/` is in scope too; elsewhere is not.
+        assert_eq!(run_file("fault/a.rs", src).len(), 1);
+        assert!(run_file("util/a.rs", src).is_empty());
         // `match m.lock() { .. }` is fine.
         let ok = "fn a(m: &std::sync::Mutex<u32>) { match m.lock() { Ok(_) => {} Err(_) => {} } }\n";
         assert!(run_file("coordinator/a.rs", ok).is_empty());

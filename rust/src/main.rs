@@ -19,15 +19,23 @@ fn usage() -> ! {
          \x20             --workers W --seed S\n\
          \x20             [--batch-max B] [--batch-window-us U] [--batch-alpha A]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
-         \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|batch|all>\n\
+         \x20             [fault flags, see below]\n\
+         \x20 experiment  <fig6a|fig6b|fig6c|table1|fig7|fig8|fig9|fig10|batch|chaos|all>\n\
          \x20             [--quick] [--seed S] [--threads N]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
          \x20 serve       --rate R --jobs N [--workers W] [--artifacts DIR]\n\
          \x20             [--batch-max B] [--batch-window-us U] [--batch-alpha A]\n\
          \x20             [--trace-out FILE] [--metrics-out FILE]\n\
+         \x20             [fault flags, see below]\n\
          \x20 validate    [--jobs N] [--artifacts DIR]\n\
          \x20 models      [--artifacts DIR]\n\
-         \x20 lint        [--root DIR] [--json FILE]"
+         \x20 lint        [--root DIR] [--json FILE]\n\
+         \n\
+         fault flags (simulate, serve; DESIGN.md \u{a7}9):\n\
+         \x20 [--crash-rate P] [--crash W@MS,...] [--crash-window-ms MS]\n\
+         \x20 [--slowdown-rate P] [--slowdown-factor F]\n\
+         \x20 [--drop-prob P] [--delay-prob P] [--fetch-fail-prob P]\n\
+         \x20 [--heartbeat-timeout-ms MS] [--fault-seed S]"
     );
     std::process::exit(2);
 }
@@ -63,6 +71,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(a) = args.get("batch-alpha") {
         cfg.cost.batch.alpha_override = Some(a.parse()?);
     }
+    compass::fault::apply_fault_args(&mut cfg.fault, args)?;
     let seed = cfg.seed ^ 0x9e37;
     let jobs = compass::workload::poisson(
         args.get_f64("rate", 2.0),
@@ -87,6 +96,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         m.cache_hit_rate(),
         m.active_workers()
     );
+    if m.faults != compass::metrics::FaultStats::default() {
+        println!(
+            "faults: {} workers failed | {} tasks re-placed | {} retries | {} jobs failed | completion {:.1}%",
+            m.faults.workers_failed,
+            m.faults.tasks_re_placed,
+            m.faults.task_retries,
+            m.faults.jobs_failed,
+            m.completion_rate()
+        );
+    }
     compass::obs::write_outputs(
         &rep.trace,
         &rep.metrics,

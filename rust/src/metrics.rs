@@ -13,13 +13,26 @@ use crate::util::stats::{mean, BoxStats};
 pub const GPU_IDLE_WATTS: f64 = 10.0;
 pub const GPU_ACTIVE_WATTS: f64 = 70.0;
 
-/// One completed job instance.
+/// Terminal outcome of a job (DESIGN.md §9). Failure-free runs only ever
+/// produce `Completed`; under fault injection a job whose tasks had to be
+/// re-placed after a worker death still finishes (`Degraded`), and a job
+/// is `Failed` only when no alive worker remained to run it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum JobOutcome {
+    #[default]
+    Completed,
+    Degraded,
+    Failed,
+}
+
+/// One terminated job instance.
 #[derive(Debug, Clone, Copy)]
 pub struct JobRecord {
     pub kind: PipelineKind,
     pub arrival_us: Micros,
     pub completion_us: Micros,
     pub lower_bound_us: Micros,
+    pub outcome: JobOutcome,
 }
 
 impl JobRecord {
@@ -32,6 +45,27 @@ impl JobRecord {
     pub fn slowdown(&self) -> f64 {
         self.latency_us() as f64 / self.lower_bound_us as f64
     }
+
+    /// Did the job terminate without producing its result? Failed records
+    /// carry the failure time in `completion_us`, so their latency is not
+    /// an end-to-end latency — latency statistics exclude them.
+    pub fn failed(&self) -> bool {
+        self.outcome == JobOutcome::Failed
+    }
+}
+
+/// Fault-injection and recovery counters (DESIGN.md §9), zero in any
+/// failure-free run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Workers declared dead by the staleness detector.
+    pub workers_failed: u64,
+    /// Orphaned tasks re-placed through the planner after a worker death.
+    pub tasks_re_placed: u64,
+    /// Transient-failure retries (model fetch today).
+    pub task_retries: u64,
+    /// Jobs that reached the `Failed` outcome.
+    pub jobs_failed: u64,
 }
 
 /// Per-worker aggregates sampled at simulation end.
@@ -57,19 +91,59 @@ pub struct MetricsSink {
     pub span_us: Micros,
     /// Jobs generated but not completed when the run ended.
     pub incomplete: usize,
+    /// Fault-injection counters; all zero unless faults were injected.
+    pub faults: FaultStats,
 }
 
 impl MetricsSink {
     pub fn slowdowns(&self) -> Vec<f64> {
-        self.jobs.iter().map(|j| j.slowdown()).collect()
+        self.jobs.iter().filter(|j| !j.failed()).map(|j| j.slowdown()).collect()
     }
 
     pub fn slowdowns_of(&self, kind: PipelineKind) -> Vec<f64> {
-        self.jobs.iter().filter(|j| j.kind == kind).map(|j| j.slowdown()).collect()
+        self.jobs
+            .iter()
+            .filter(|j| j.kind == kind && !j.failed())
+            .map(|j| j.slowdown())
+            .collect()
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        mean(&self.jobs.iter().map(|j| j.latency_us() as f64 / SEC as f64).collect::<Vec<_>>())
+        mean(
+            &self
+                .jobs
+                .iter()
+                .filter(|j| !j.failed())
+                .map(|j| j.latency_us() as f64 / SEC as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// End-to-end latencies (s) of jobs that produced a result, for
+    /// percentile reporting (`experiment chaos`).
+    pub fn latencies_s(&self) -> Vec<f64> {
+        self.jobs
+            .iter()
+            .filter(|j| !j.failed())
+            .map(|j| j.latency_us() as f64 / SEC as f64)
+            .collect()
+    }
+
+    /// Jobs that terminated `Degraded` (recovered after a fault).
+    pub fn degraded_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.outcome == JobOutcome::Degraded).count()
+    }
+
+    /// Percentage of generated jobs that produced a result: terminal
+    /// non-`Failed` records over everything generated (records + jobs
+    /// still in flight when the run ended). 100 when nothing ran.
+    pub fn completion_rate(&self) -> f64 {
+        let generated = self.jobs.len() + self.incomplete;
+        if generated == 0 {
+            return 100.0;
+        }
+        let done = self.jobs.iter().filter(|j| !j.failed()).count();
+        100.0 * done as f64 / generated as f64
     }
 
     pub fn mean_slowdown(&self) -> f64 {
@@ -77,10 +151,11 @@ impl MetricsSink {
     }
 
     pub fn median_slowdown(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let xs = self.slowdowns();
+        if xs.is_empty() {
             return f64::NAN;
         }
-        crate::util::stats::median(&self.slowdowns())
+        crate::util::stats::median(&xs)
     }
 
     pub fn box_stats(&self, kind: PipelineKind) -> Option<BoxStats> {
@@ -191,6 +266,7 @@ mod tests {
             arrival_us: 0,
             completion_us: lat_s * SEC,
             lower_bound_us: lb_s * SEC,
+            outcome: JobOutcome::Completed,
         }
     }
 
@@ -211,6 +287,7 @@ mod tests {
             ],
             span_us: 10 * SEC,
             incomplete: 0,
+            faults: FaultStats::default(),
         };
         assert!((sink.gpu_utilization() - 25.0).abs() < 1e-9);
         // Energy: 2 workers idle 10 s = 200 J, plus 60 W × 5 s active = 300 J.
@@ -262,6 +339,27 @@ mod tests {
         b.stop(25);
         b.start(30);
         assert_eq!(b.total(40), 25);
+    }
+
+    #[test]
+    fn failed_jobs_excluded_from_latency_stats() {
+        let mut failed = record(PipelineKind::Vpa, 9, 1);
+        failed.outcome = JobOutcome::Failed;
+        let mut degraded = record(PipelineKind::Vpa, 4, 2);
+        degraded.outcome = JobOutcome::Degraded;
+        let sink = MetricsSink {
+            jobs: vec![record(PipelineKind::Vpa, 2, 1), degraded, failed],
+            incomplete: 1,
+            ..Default::default()
+        };
+        // Failed record contributes to neither slowdowns nor latencies.
+        assert_eq!(sink.slowdowns(), vec![2.0, 2.0]);
+        assert_eq!(sink.latencies_s(), vec![2.0, 4.0]);
+        assert_eq!(sink.degraded_jobs(), 1);
+        // 2 results over 4 generated (3 records + 1 in flight).
+        assert!((sink.completion_rate() - 50.0).abs() < 1e-9);
+        // Empty sink is vacuously 100% complete.
+        assert_eq!(MetricsSink::default().completion_rate(), 100.0);
     }
 
     #[test]

@@ -62,13 +62,25 @@ pub fn chrome_trace(trace: &Trace) -> String {
             | TraceEvent::CacheEvict { worker, .. }
             | TraceEvent::SstStaleness { worker, .. }
             | TraceEvent::BatchFormed { worker, .. }
-            | TraceEvent::BatchExecuted { worker, .. } => {
+            | TraceEvent::BatchExecuted { worker, .. }
+            | TraceEvent::TaskRetried { worker, .. }
+            | TraceEvent::RuntimeLoadFailed { worker, .. } => {
                 workers.insert(worker);
             }
             TraceEvent::Decision { decider, chosen, .. } => {
                 workers.insert(decider);
                 workers.insert(chosen);
             }
+            TraceEvent::WorkerFailed { worker, detector, .. } => {
+                workers.insert(worker);
+                workers.insert(detector);
+            }
+            TraceEvent::TaskRePlaced { from, to, .. } => {
+                workers.insert(from);
+                workers.insert(to);
+            }
+            // Degraded-job instants live on the synthetic jobs track.
+            TraceEvent::JobDegraded { .. } => {}
             // Job lifecycle events live on the synthetic jobs track, not a
             // worker track. Exhaustive by design (lint rule L4).
             TraceEvent::JobArrive { .. } | TraceEvent::JobComplete { .. } => {}
@@ -174,6 +186,32 @@ pub fn chrome_trace(trace: &Trace) -> String {
                 let args = format!("\"model\":{model},\"size\":{size}");
                 let name = format!("batch executed m{model} x{size}");
                 instant(&mut out, &name, "batch", worker as u32, t, &args);
+            }
+            TraceEvent::WorkerFailed { worker, detector, t } => {
+                let args = format!("\"worker\":{worker},\"detector\":{detector}");
+                let name = format!("worker {worker} failed");
+                // Rendered on the dead worker's own track, where its spans
+                // visibly stop.
+                instant(&mut out, &name, "fault", worker as u32, t, &args);
+            }
+            TraceEvent::TaskRetried { worker, model, attempt, t } => {
+                let args = format!("\"model\":{model},\"attempt\":{attempt}");
+                let name = format!("retry m{model} #{attempt}");
+                instant(&mut out, &name, "fault", worker as u32, t, &args);
+            }
+            TraceEvent::TaskRePlaced { job, task, from, to, t } => {
+                let args = format!("\"job\":{job},\"task\":{task},\"from\":{from},\"to\":{to}");
+                let name = format!("re-place j{job}:t{task} w{from}->w{to}");
+                instant(&mut out, &name, "fault", to as u32, t, &args);
+            }
+            TraceEvent::JobDegraded { job, kind, t } => {
+                let args = format!("\"job\":{},\"kind\":\"{}\"", job, kind.name());
+                instant(&mut out, "job degraded", "fault", JOBS_TID, t, &args);
+            }
+            TraceEvent::RuntimeLoadFailed { worker, attempt, t } => {
+                let args = format!("\"worker\":{worker},\"attempt\":{attempt}");
+                let name = format!("pjrt load failed #{attempt}");
+                instant(&mut out, &name, "fault", worker as u32, t, &args);
             }
             // Task/fetch edge events are rendered as reconstructed duration
             // spans above (task_spans / fetch_spans), not as instants.

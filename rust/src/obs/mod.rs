@@ -19,6 +19,9 @@
 //! - GPU cache traffic: `CacheHit` / `CacheMiss` / `CacheInsert` /
 //!   `CacheEvict`
 //! - SST health: [`TraceEvent::SstStaleness`] samples
+//! - faults and recovery (DESIGN.md §9): [`TraceEvent::WorkerFailed`] /
+//!   [`TraceEvent::TaskRetried`] / [`TraceEvent::TaskRePlaced`] /
+//!   [`TraceEvent::JobDegraded`]
 //!
 //! Exporters: [`chrome::chrome_trace`] (Chrome `trace_event` JSON, one track
 //! per worker, loadable in Perfetto / `chrome://tracing`) and
@@ -141,6 +144,21 @@ pub enum TraceEvent {
     BatchFormed { worker: u16, model: ModelId, size: u16, t: Micros },
     /// A batch execution finished; its `size` members all ended at `t`.
     BatchExecuted { worker: u16, model: ModelId, size: u16, t: Micros },
+    /// The failure detector declared `worker` dead at `t` and poisoned its
+    /// SST row; `detector` is the peer whose staleness check fired.
+    WorkerFailed { worker: u16, detector: u16, t: Micros },
+    /// A transient failure (model fetch) is being retried on `worker`;
+    /// `attempt` is 0-based, so the first retry records attempt 0.
+    TaskRetried { worker: u16, model: ModelId, attempt: u16, t: Micros },
+    /// A task orphaned by a worker death was re-placed `from` → `to`
+    /// through the ordinary planner path.
+    TaskRePlaced { job: JobId, task: u16, from: u16, to: u16, t: Micros },
+    /// A job finished, but only after fault recovery re-placed at least
+    /// one of its tasks (terminal outcome `Degraded`).
+    JobDegraded { job: JobId, kind: PipelineKind, t: Micros },
+    /// A live worker's PJRT runtime failed to load; `attempt` is 1-based.
+    /// After the last attempt the worker falls back to the stub runtime.
+    RuntimeLoadFailed { worker: u16, attempt: u16, t: Micros },
 }
 
 impl TraceEvent {
@@ -161,7 +179,12 @@ impl TraceEvent {
             | TraceEvent::CacheEvict { t, .. }
             | TraceEvent::SstStaleness { t, .. }
             | TraceEvent::BatchFormed { t, .. }
-            | TraceEvent::BatchExecuted { t, .. } => t,
+            | TraceEvent::BatchExecuted { t, .. }
+            | TraceEvent::WorkerFailed { t, .. }
+            | TraceEvent::TaskRetried { t, .. }
+            | TraceEvent::TaskRePlaced { t, .. }
+            | TraceEvent::JobDegraded { t, .. }
+            | TraceEvent::RuntimeLoadFailed { t, .. } => t,
         }
     }
 }

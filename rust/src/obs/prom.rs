@@ -87,6 +87,11 @@ fn event_kind(ev: &TraceEvent) -> &'static str {
         TraceEvent::SstStaleness { .. } => "sst_staleness",
         TraceEvent::BatchFormed { .. } => "batch_formed",
         TraceEvent::BatchExecuted { .. } => "batch_executed",
+        TraceEvent::WorkerFailed { .. } => "worker_failed",
+        TraceEvent::TaskRetried { .. } => "task_retried",
+        TraceEvent::TaskRePlaced { .. } => "task_re_placed",
+        TraceEvent::JobDegraded { .. } => "job_degraded",
+        TraceEvent::RuntimeLoadFailed { .. } => "runtime_load_failed",
     }
 }
 
@@ -139,6 +144,39 @@ pub fn prometheus_snapshot(m: &MetricsSink, trace: Option<&Trace>) -> String {
         m.active_workers() as f64,
     );
 
+    // Fault-injection and recovery counters (DESIGN.md §9); all zero in a
+    // failure-free run.
+    counter(
+        &mut out,
+        "compass_workers_failed_total",
+        "Workers declared dead by the staleness detector.",
+        m.faults.workers_failed,
+    );
+    counter(
+        &mut out,
+        "compass_tasks_re_placed_total",
+        "Orphaned tasks re-placed after a worker death.",
+        m.faults.tasks_re_placed,
+    );
+    counter(
+        &mut out,
+        "compass_task_retries_total",
+        "Transient-failure retries (bounded, exponential backoff).",
+        m.faults.task_retries,
+    );
+    counter(
+        &mut out,
+        "compass_jobs_failed_total",
+        "Jobs that reached the Failed outcome (no alive worker).",
+        m.faults.jobs_failed,
+    );
+    counter(
+        &mut out,
+        "compass_jobs_degraded_total",
+        "Jobs completed only after fault recovery (Degraded outcome).",
+        m.degraded_jobs() as u64,
+    );
+
     // Per-worker counters, labeled by worker id.
     let per_worker: [(&str, &str, fn(&crate::metrics::WorkerMetrics) -> u64); 4] = [
         ("compass_worker_cache_hits_total", "Model-cache hits.", |w| w.hits),
@@ -161,8 +199,9 @@ pub fn prometheus_snapshot(m: &MetricsSink, trace: Option<&Trace>) -> String {
     }
 
     // Job end-to-end latency histogram from the sink (always available).
+    // Failed jobs never produced a result, so they have no latency.
     let mut job_lat = Histogram::new();
-    for j in &m.jobs {
+    for j in m.jobs.iter().filter(|j| !j.failed()) {
         job_lat.record(j.latency_us());
     }
     histogram(
@@ -264,6 +303,7 @@ mod tests {
                 arrival_us: 0,
                 completion_us: 2_000_000,
                 lower_bound_us: 1_000_000,
+                outcome: crate::metrics::JobOutcome::Completed,
             }],
             workers: vec![WorkerMetrics {
                 busy_us: 500_000,
@@ -275,6 +315,7 @@ mod tests {
             }],
             span_us: 10_000_000,
             incomplete: 2,
+            faults: Default::default(),
         }
     }
 
@@ -331,6 +372,40 @@ mod tests {
         let helps = text.matches("# HELP").count();
         let types = text.matches("# TYPE").count();
         assert_eq!(helps, types);
+    }
+
+    #[test]
+    fn fault_counters_present_and_zero_by_default() {
+        let text = prometheus_snapshot(&sink(), None);
+        assert!(text.contains("compass_workers_failed_total 0"));
+        assert!(text.contains("compass_tasks_re_placed_total 0"));
+        assert!(text.contains("compass_task_retries_total 0"));
+        assert!(text.contains("compass_jobs_failed_total 0"));
+        assert!(text.contains("compass_jobs_degraded_total 0"));
+        let mut s = sink();
+        s.faults.workers_failed = 2;
+        s.faults.tasks_re_placed = 5;
+        let text = prometheus_snapshot(&s, None);
+        assert!(text.contains("compass_workers_failed_total 2"));
+        assert!(text.contains("compass_tasks_re_placed_total 5"));
+    }
+
+    #[test]
+    fn fault_events_have_kind_labels() {
+        let trace = Trace {
+            events: vec![
+                TraceEvent::WorkerFailed { worker: 1, detector: 0, t: 5 },
+                TraceEvent::TaskRetried { worker: 0, model: 2, attempt: 0, t: 6 },
+                TraceEvent::TaskRePlaced { job: 3, task: 1, from: 1, to: 0, t: 7 },
+                TraceEvent::JobDegraded { job: 3, kind: PipelineKind::Vpa, t: 9 },
+            ],
+            dropped: 0,
+        };
+        let text = prometheus_snapshot(&sink(), Some(&trace));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"worker_failed\"} 1"));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"task_retried\"} 1"));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"task_re_placed\"} 1"));
+        assert!(text.contains("compass_trace_events_by_kind_total{kind=\"job_degraded\"} 1"));
     }
 
     #[test]

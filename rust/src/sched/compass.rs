@@ -104,6 +104,11 @@ impl Scheduler for Compass {
             let mut best_w = 0;
             let mut best_ft = Micros::MAX;
             for w in 0..w_count {
+                // Dead workers are masked out before any finish-time
+                // arithmetic (their rows hold the POISONED_FT sentinel).
+                if !view.alive(w) {
+                    continue;
+                }
                 // AT_allInputs(t, w) — Eqs. 3-4. Predecessors are already
                 // assigned (rank order is topological within a job).
                 let at_inputs = if dfg.preds[t].is_empty() {
@@ -182,22 +187,29 @@ impl Scheduler for Compass {
         probe: &mut DecisionProbe,
     ) -> WorkerId {
         let planned = ctx.planned.expect("compass plans every task");
-        if !self.cfg.dynamic_adjust {
-            probe.offer(planned, 0);
-            return planned;
-        }
-        // Line 3: join tasks cannot be moved without predecessor
-        // coordination.
-        if ctx.dfg.is_join(ctx.task) {
-            probe.offer(planned, 0);
-            return planned;
-        }
-        // Line 2: FT(w) > R(t, w) * threshold ⇒ reschedule.
-        let r_planned = view.r(ctx.dfg, ctx.task, planned);
-        let above = view.wait(planned) as f64 > r_planned as f64 * self.cfg.adjust_threshold;
-        if !above {
-            probe.offer(planned, view.wait(planned));
-            return planned;
+        // A dead planned worker forces a re-placement regardless of the
+        // ablation switches, the join pin, or the wait threshold — the
+        // recovery path (DESIGN.md §9) depends on this override.
+        let planned_dead = !view.alive(planned);
+        if !planned_dead {
+            if !self.cfg.dynamic_adjust {
+                probe.offer(planned, 0);
+                return planned;
+            }
+            // Line 3: join tasks cannot be moved without predecessor
+            // coordination.
+            if ctx.dfg.is_join(ctx.task) {
+                probe.offer(planned, 0);
+                return planned;
+            }
+            // Line 2: FT(w) > R(t, w) * threshold ⇒ reschedule.
+            let r_planned = view.r(ctx.dfg, ctx.task, planned);
+            let above =
+                view.wait(planned) as f64 > r_planned as f64 * self.cfg.adjust_threshold;
+            if !above {
+                probe.offer(planned, view.wait(planned));
+                return planned;
+            }
         }
         // Lines 6-12: rank workers by earliest finish for this task. All
         // inputs already exist (t just became dispatchable), so they are
@@ -205,9 +217,12 @@ impl Scheduler for Compass {
         // lint: hot-path
         // Algorithm 2 runs on every task dispatch; like planning, it must
         // not allocate per decision.
-        let mut best = planned;
+        let mut best = view.fallback_alive(planned);
         let mut best_ft = Micros::MAX;
         for w in 0..view.n_workers() {
+            if !view.alive(w) {
+                continue;
+            }
             // Lines 8-11: queue wait + model fetch + runtime, plus the input
             // transfer when moving off this scheduler's worker (arrival_at
             // charges only non-colocated inputs, a refinement of line 11).

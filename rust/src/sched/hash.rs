@@ -26,7 +26,12 @@ impl Scheduler for HashSched {
     ) -> Adfg {
         let mut adfg = Adfg::unassigned(dfg.len());
         for t in 0..dfg.len() {
-            let w = (hash_pair(job.id, t as u64) % view.n_workers() as u64) as WorkerId;
+            // Stateless hashing cannot see deaths, so liveness is a ring
+            // fallback bolted on after the hash (the identity while every
+            // worker is alive).
+            let w = view.fallback_alive(
+                (hash_pair(job.id, t as u64) % view.n_workers() as u64) as WorkerId,
+            );
             probe.begin(t);
             probe.offer(w, 0);
             adfg.set(t, w);
@@ -37,10 +42,10 @@ impl Scheduler for HashSched {
     fn assign_probed(
         &self,
         ctx: &AssignCtx,
-        _view: &ClusterView,
+        view: &ClusterView,
         probe: &mut DecisionProbe,
     ) -> WorkerId {
-        let planned = ctx.planned.expect("hash plans every task");
+        let planned = view.fallback_alive(ctx.planned.expect("hash plans every task"));
         probe.offer(planned, 0);
         planned
     }

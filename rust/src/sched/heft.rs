@@ -48,6 +48,11 @@ impl Scheduler for Heft {
             let mut best_w = 0;
             let mut best_ft = Micros::MAX;
             for w in 0..w_count {
+                // Classic HEFT ignores the SST's load data, but liveness
+                // still comes from it: dead workers are masked out.
+                if !view.alive(w) {
+                    continue;
+                }
                 let at_inputs = if dfg.preds[t].is_empty() {
                     view.now + view.cost.td_input(job.input_bytes, view.self_worker, w)
                 } else {
@@ -75,14 +80,16 @@ impl Scheduler for Heft {
         adfg
     }
 
-    /// No adjustment phase: workers adhere to the locked schedule.
+    /// No adjustment phase: workers adhere to the locked schedule. The one
+    /// exception is liveness — a schedule locked onto a worker that has
+    /// since died falls back to the next alive peer on the ring.
     fn assign_probed(
         &self,
         ctx: &AssignCtx,
-        _view: &ClusterView,
+        view: &ClusterView,
         probe: &mut DecisionProbe,
     ) -> WorkerId {
-        let planned = ctx.planned.expect("HEFT plans every task");
+        let planned = view.fallback_alive(ctx.planned.expect("HEFT plans every task"));
         probe.offer(planned, 0);
         planned
     }

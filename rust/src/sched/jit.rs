@@ -37,9 +37,12 @@ impl Scheduler for Jit {
         view: &ClusterView,
         probe: &mut DecisionProbe,
     ) -> WorkerId {
-        let mut best = view.self_worker;
+        let mut best = view.fallback_alive(view.self_worker);
         let mut best_start = Micros::MAX;
         for w in 0..view.n_workers() {
+            if !view.alive(w) {
+                continue;
+            }
             // Inputs all exist (the task just became dispatchable), so they
             // are available `now` at their holders — no per-call vector.
             let arrive = arrival_at(view, ctx.pred_outputs, view.now, w);

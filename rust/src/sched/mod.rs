@@ -86,6 +86,35 @@ impl<'a> ClusterView<'a> {
     pub fn wait(&self, w: WorkerId) -> Micros {
         self.rows[w].ft_us.saturating_sub(self.now)
     }
+
+    /// Is w schedulable? A poisoned row (worker declared dead by the
+    /// failure detector, DESIGN.md §9) masks the worker out of every
+    /// scheduler. Callers must check this *before* any finish-time
+    /// arithmetic: a poisoned row's `ft_us` is the `u64::MAX` sentinel.
+    #[inline]
+    pub fn alive(&self, w: WorkerId) -> bool {
+        !self.rows[w].poisoned()
+    }
+
+    /// `w` itself when alive — the identity in a failure-free cluster —
+    /// otherwise the next alive worker on the ring. Used by the schedulers
+    /// without a scoring loop (Hash, locked HEFT assignments). Returns `w`
+    /// unchanged if no worker is alive; callers only dispatch while at
+    /// least one survives.
+    #[inline]
+    pub fn fallback_alive(&self, w: WorkerId) -> WorkerId {
+        if self.alive(w) {
+            return w;
+        }
+        let n = self.n_workers();
+        for i in 1..n {
+            let c = (w + i) % n;
+            if self.alive(c) {
+                return c;
+            }
+        }
+        w
+    }
 }
 
 /// Context for an `assign` call: task t has just become dispatchable.
@@ -311,6 +340,67 @@ mod tests {
         for kind in SchedulerKind::ALL {
             let cfg = ClusterConfig::default().with_scheduler(kind);
             assert_eq!(build(&cfg).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn alive_masking_and_ring_fallback() {
+        let cost = CostModel::default();
+        let speed = vec![1.0; 4];
+        let mut r = rows(4);
+        r[1].ft_us = crate::sst::POISONED_FT;
+        r[2].ft_us = crate::sst::POISONED_FT;
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
+        assert!(view.alive(0) && !view.alive(1) && !view.alive(2) && view.alive(3));
+        assert_eq!(view.fallback_alive(0), 0, "alive worker is the identity");
+        assert_eq!(view.fallback_alive(1), 3, "ring-probes past dead peers");
+        assert_eq!(view.fallback_alive(2), 3);
+    }
+
+    #[test]
+    fn every_scheduler_avoids_poisoned_worker() {
+        use crate::dfg::pipelines;
+        let cost = CostModel::default();
+        let dfg = pipelines::translation(&cost);
+        let mut r = rows(4);
+        r[2].ft_us = crate::sst::POISONED_FT;
+        let speed = vec![1.0; 4];
+        let view = ClusterView {
+            now: 0,
+            self_worker: 0,
+            rows: &r,
+            cost: &cost,
+            speed: &speed,
+            scratch: &PlanCell::default(),
+        };
+        for kind in SchedulerKind::ALL {
+            let cfg = ClusterConfig::default().with_scheduler(kind);
+            let sched = build(&cfg);
+            for id in 0..64u64 {
+                let job = Job { id, kind: dfg.kind, arrival_us: 0, input_bytes: 100 };
+                let adfg = sched.plan(&job, &dfg, &view);
+                for t in 0..dfg.len() {
+                    assert_ne!(adfg.get(t), Some(2), "{kind:?} planned onto dead worker");
+                    let outs = [(0usize, 100u64)];
+                    let ctx = AssignCtx {
+                        job: &job,
+                        dfg: &dfg,
+                        task: t,
+                        // Force the dead worker as the planned slot: every
+                        // assign hook must re-place it.
+                        planned: Some(2),
+                        pred_outputs: &outs,
+                    };
+                    assert_ne!(sched.assign(&ctx, &view), 2, "{kind:?} assigned dead worker");
+                }
+            }
         }
     }
 

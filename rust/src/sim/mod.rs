@@ -18,10 +18,11 @@ pub use worker::{QTask, SimWorker};
 
 use crate::config::ClusterConfig;
 use crate::core::{hash_pair, Micros, ModelId, TaskId, WorkerId};
-use crate::dfg::models::model_bytes;
+use crate::dfg::models::{model_bytes, N_MODELS};
 use crate::dfg::{pipelines, Adfg, Dfg, Job};
+use crate::fault::{FaultPlan, NetFaults};
 use crate::gpu::CacheEventKind;
-use crate::metrics::{JobRecord, MetricsSink, WorkerMetrics};
+use crate::metrics::{FaultStats, JobOutcome, JobRecord, MetricsSink, WorkerMetrics};
 use crate::obs::{SchedPhase, Trace, TraceEvent, Tracer};
 use crate::profiles::ProfileRepository;
 use crate::sched::{self, AssignCtx, ClusterView, DecisionProbe, PlanCell, Scheduler};
@@ -40,7 +41,10 @@ enum Event {
     /// ADFG message lands at `w`: task joins its execution queue.
     TaskEnqueue { w: WorkerId, job_idx: usize, task: TaskId },
     /// One input object for (job, task) landed at the assigned worker.
-    InputArrive { job_idx: usize, task: TaskId },
+    /// `gen` is the placement generation the transfer was addressed to;
+    /// a mismatch against [`JobState::placement_gen`] means the task was
+    /// re-placed while the bytes were in flight, and the arrival is void.
+    InputArrive { job_idx: usize, task: TaskId, gen: u32 },
     /// PCIe fetch of `model` finished on `w`.
     FetchDone { w: WorkerId, model: ModelId },
     /// Task execution finished on `w`.
@@ -54,13 +58,19 @@ enum Event {
     /// Rate-limited SST pushes (§5.2); separate load/cache timers (Fig. 8).
     PushLoad { w: WorkerId },
     PushCache { w: WorkerId },
+    /// Fault injection: worker `w` fails silently at this instant. The
+    /// event only *silences* the worker (its queue and running work stop
+    /// making progress, its SST pushes cease); peers discover the failure
+    /// later through SST staleness and run recovery then, so detection
+    /// latency is modeled, not assumed away.
+    WorkerCrash { w: WorkerId },
 }
 
 /// Per-job bookkeeping during simulation. Every vector is pre-sized from
 /// the DFG at construction, and the layout is flat: the per-edge `sent`
 /// flags live in one vector indexed through `Simulator::succ_off` (edge
 /// `p → succs[p][slot]` is bit `succ_off[p] + slot`) instead of a
-/// vec-of-vecs, so a job costs 5 allocations instead of 6 + one per task.
+/// vec-of-vecs, so a job costs 6 allocations instead of 7 + one per task.
 struct JobState {
     job: Job,
     adfg: Adfg,
@@ -72,6 +82,13 @@ struct JobState {
     output_worker: Vec<Option<WorkerId>>,
     /// Flat per-edge output-sent flags; see `Simulator::succ_off`.
     sent: Vec<bool>,
+    /// Per-task placement generation. Bumped when a task is re-placed
+    /// after a worker failure so in-flight [`Event::InputArrive`] events
+    /// addressed to the old placement are recognized as stale and dropped.
+    placement_gen: Vec<u32>,
+    /// True once any task of this job was re-placed by failure recovery;
+    /// the job then completes as [`JobOutcome::Degraded`].
+    disrupted: bool,
     completed: bool,
 }
 
@@ -86,6 +103,8 @@ impl JobState {
             remaining_preds: (0..n).map(|t| dfg.preds[t].len()).collect(),
             output_worker: vec![None; n],
             sent: vec![false; edges],
+            placement_gen: vec![0; n],
+            disrupted: false,
             completed: false,
         }
     }
@@ -148,6 +167,27 @@ pub struct Simulator {
     members_buf: Vec<usize>,
     /// Retired batch members awaiting successor processing.
     done_buf: Vec<QTask>,
+    /// Materialized fault schedule (empty ⇒ every fault path is inert and
+    /// the run is byte-identical to a fault-free build).
+    fault_plan: FaultPlan,
+    /// Network-fault shim for cross-worker messages; None when disabled.
+    net_faults: Option<NetFaults>,
+    /// RNG for online fault draws (fetch failures). Seeded from
+    /// `cfg.fault.seed ^ 0xFA02`, never from the workload seed, so fault
+    /// draws don't perturb workload randomness.
+    fault_rng: Rng,
+    /// Ground-truth crash flags, set the instant `WorkerCrash` fires —
+    /// before any peer has *detected* the failure via SST staleness.
+    crashed: Vec<bool>,
+    /// Instant each worker crashed (busy-time accounting stops there).
+    crash_at_us: Vec<Micros>,
+    alive_workers: usize,
+    /// Consecutive-failure counters per (worker, model) fetch, flat-indexed
+    /// `w * N_MODELS + m`; reset on success or on hitting the retry cap.
+    fetch_attempts: Vec<u32>,
+    fault_stats: FaultStats,
+    /// Tasks drained off a dead worker, awaiting re-placement (reused).
+    orphan_buf: Vec<QTask>,
 }
 
 impl Simulator {
@@ -178,6 +218,7 @@ impl Simulator {
                 off
             })
             .collect();
+        let fault_plan = FaultPlan::materialize(&cfg.fault, cfg.n_workers);
         Simulator {
             sst: Sst::new(cfg.n_workers),
             dfgs,
@@ -202,8 +243,46 @@ impl Simulator {
             lookahead_buf: Vec::new(),
             members_buf: Vec::new(),
             done_buf: Vec::new(),
+            fault_plan,
+            net_faults: cfg.fault.net_faults(),
+            fault_rng: Rng::new(cfg.fault.seed ^ 0xFA02),
+            crashed: vec![false; cfg.n_workers],
+            crash_at_us: vec![0; cfg.n_workers],
+            alive_workers: cfg.n_workers,
+            fetch_attempts: vec![0; cfg.n_workers * N_MODELS],
+            fault_stats: FaultStats::default(),
+            orphan_buf: Vec::new(),
             cfg,
         }
+    }
+
+    /// Extra network delay for a `from → to` message under the fault
+    /// shim. Local messages never touch the network (and draw nothing);
+    /// without a shim this is free and drawless, keeping fault-free runs
+    /// byte-identical.
+    #[inline]
+    fn net_extra(&mut self, from: WorkerId, to: WorkerId) -> Micros {
+        if from == to {
+            return 0;
+        }
+        match &mut self.net_faults {
+            Some(nf) => nf.extra_delay_us(),
+            None => 0,
+        }
+    }
+
+    /// First non-crashed worker at or after `from` in ring order. Uses
+    /// ground truth (not SST poison state): it models a *client* retrying
+    /// until a connection is accepted, which needs no failure detector.
+    fn first_alive(&self, from: WorkerId) -> Option<WorkerId> {
+        let n = self.cfg.n_workers;
+        for i in 0..n {
+            let c = (from + i) % n;
+            if !self.crashed[c] {
+                return Some(c);
+            }
+        }
+        None
     }
 
     fn push_event(&mut self, at: Micros, ev: Event) {
@@ -263,6 +342,7 @@ impl Simulator {
                 }
             }
         }
+        let planned_before = self.jobs[job_idx].adfg.get(task);
         let target = {
             let js = &self.jobs[job_idx];
             let dfg = &self.dfgs[js.job.kind.index()];
@@ -278,7 +358,7 @@ impl Simulator {
                 job: &js.job,
                 dfg,
                 task,
-                planned: js.adfg.get(task),
+                planned: planned_before,
                 pred_outputs: &pred_outputs,
             };
             self.scheduler.assign_probed(&ctx, &view, &mut probe)
@@ -296,18 +376,42 @@ impl Simulator {
             });
         }
 
+        // A placement pointing at a worker declared dead means this assign
+        // IS a recovery re-placement (Algorithm 2 with the poisoned row
+        // masked). Account for it centrally: queue-drain recovery, late
+        // ADFG messages, and pinned joins rescued at assign time all pass
+        // through here.
+        let re_placed =
+            planned_before.map_or(false, |p| self.sst.rows()[p].poisoned());
+        if re_placed {
+            self.jobs[job_idx].disrupted = true;
+            self.fault_stats.tasks_re_placed += 1;
+            if self.tracer.on() {
+                self.tracer.record(TraceEvent::TaskRePlaced {
+                    job: self.jobs[job_idx].job.id,
+                    task: task as u16,
+                    from: planned_before.unwrap_or(on_worker) as u16,
+                    to: target as u16,
+                    t: self.now,
+                });
+            }
+        }
+
         self.jobs[job_idx].adfg.set(task, target);
+        let gen = self.jobs[job_idx].placement_gen[task];
 
         // ADFG dispatch message (tiny) to the target worker.
         let delta = self.cfg.cost.delta_net_us;
-        let enq_at = if target == on_worker { self.now } else { self.now + delta };
+        let extra = self.net_extra(on_worker, target);
+        let enq_at = if target == on_worker { self.now } else { self.now + delta + extra };
         self.push_event(enq_at, Event::TaskEnqueue { w: target, job_idx, task });
 
         // Ship every not-yet-sent input to the target.
         let dfg_idx = self.jobs[job_idx].job.kind.index();
         if self.dfgs[dfg_idx].preds[task].is_empty() {
             let td = self.cfg.cost.td_input(pred_outputs[0].1, on_worker, target);
-            self.push_event(self.now + td, Event::InputArrive { job_idx, task });
+            let extra = self.net_extra(on_worker, target);
+            self.push_event(self.now + td + extra, Event::InputArrive { job_idx, task, gen });
         } else {
             let mut preds = std::mem::take(&mut self.preds_buf);
             preds.clear();
@@ -323,7 +427,8 @@ impl Simulator {
                 let src = self.jobs[job_idx].output_worker[p].unwrap();
                 let bytes = self.dfgs[dfg_idx].vertices[p].output_bytes;
                 let td = self.cfg.cost.td_input(bytes, src, target);
-                self.push_event(self.now + td, Event::InputArrive { job_idx, task });
+                let extra = self.net_extra(src, target);
+                self.push_event(self.now + td + extra, Event::InputArrive { job_idx, task, gen });
             }
             self.preds_buf = preds;
         }
@@ -332,9 +437,20 @@ impl Simulator {
 
     fn handle_job_arrival(&mut self, job_idx: usize) {
         // The client sends the request to an arbitrary ("ingress") worker.
-        let ingress =
+        let mut ingress =
             (hash_pair(self.jobs[job_idx].job.id, INGRESS_SALT) % self.cfg.n_workers as u64)
                 as WorkerId;
+        if self.crashed[ingress] {
+            // Connection refused is immediate: the client walks the ring
+            // until a live worker accepts, or gives up on the job.
+            match self.first_alive(ingress) {
+                Some(w) => ingress = w,
+                None => {
+                    self.fail_job(job_idx);
+                    return;
+                }
+            }
+        }
         self.view_rows(ingress);
         if self.tracer.on() {
             let (id, kind) = {
@@ -391,6 +507,11 @@ impl Simulator {
     }
 
     fn handle_exec_done(&mut self, w: WorkerId, job_idx: usize, task: TaskId) {
+        if self.crashed[w] {
+            // The worker died mid-execution; the task never finished and
+            // will be re-placed when a peer detects the failure.
+            return;
+        }
         let finished = self.workers[w].finish_task(self.now);
         self.retire_task(w, job_idx, task, finished.runtime_us);
         self.try_dispatch(w);
@@ -425,15 +546,21 @@ impl Simulator {
         // Marks the task done: done(t) ⇔ output_worker[t].is_some().
         self.jobs[job_idx].output_worker[task] = Some(w);
 
-        if task == exit {
+        if task == exit && !self.jobs[job_idx].completed {
             self.jobs[job_idx].completed = true;
             self.completed_jobs += 1;
             let js = &self.jobs[job_idx];
+            let outcome = if js.disrupted {
+                JobOutcome::Degraded
+            } else {
+                JobOutcome::Completed
+            };
             self.records.push(JobRecord {
                 kind: js.job.kind,
                 arrival_us: js.job.arrival_us,
                 completion_us: self.now,
                 lower_bound_us: self.dfgs[dfg_idx].lower_bound_us,
+                outcome,
             });
             if self.tracer.on() {
                 self.tracer.record(TraceEvent::JobComplete {
@@ -442,6 +569,13 @@ impl Simulator {
                     latency_us: self.now - js.job.arrival_us,
                     t: self.now,
                 });
+                if outcome == JobOutcome::Degraded {
+                    self.tracer.record(TraceEvent::JobDegraded {
+                        job: js.job.id,
+                        kind: js.job.kind,
+                        t: self.now,
+                    });
+                }
             }
         }
 
@@ -463,9 +597,14 @@ impl Simulator {
                     let edge = self.succ_off[dfg_idx][task] + slot;
                     if !self.jobs[job_idx].sent[edge] {
                         self.jobs[job_idx].sent[edge] = true;
+                        let gen = self.jobs[job_idx].placement_gen[s];
                         let bytes = self.dfgs[dfg_idx].vertices[task].output_bytes;
                         let td = self.cfg.cost.td_input(bytes, w, target);
-                        self.push_event(self.now + td, Event::InputArrive { job_idx, task: s });
+                        let extra = self.net_extra(w, target);
+                        self.push_event(
+                            self.now + td + extra,
+                            Event::InputArrive { job_idx, task: s, gen },
+                        );
                     }
                 }
             }
@@ -476,6 +615,11 @@ impl Simulator {
     /// A batch finished on `w`: retire every member (in start order) and
     /// feed each job's successors, then look for the next dispatch.
     fn handle_batch_done(&mut self, w: WorkerId) {
+        if self.crashed[w] {
+            // The batch died with the worker; members are recovered by
+            // the queue drain at detection time.
+            return;
+        }
         let mut done = std::mem::take(&mut self.done_buf);
         done.clear();
         let model = self.workers[w].running_batch()[0].model.expect("batch without model");
@@ -513,6 +657,9 @@ impl Simulator {
     /// `force_start`); a full batch, a model-less leader, or an expired
     /// window starts immediately.
     fn dispatch(&mut self, w: WorkerId, force_start: bool) {
+        if self.crashed[w] {
+            return;
+        }
         let now = self.now;
         let mut fetch: Option<(usize, ModelId)> = None;
         let mut start: Option<(usize, usize, TaskId, Micros, bool, Option<ModelId>)> = None;
@@ -713,6 +860,18 @@ impl Simulator {
     }
 
     fn handle_enqueue(&mut self, w: WorkerId, job_idx: usize, task: TaskId) {
+        if self.crashed[w] && self.sst.rows()[w].poisoned() {
+            // Late ADFG message to a worker already declared dead — the
+            // sender decided before the poison reached it. Recover right
+            // away instead of parking the task on a corpse. (A message to
+            // a crashed-but-undetected worker enqueues normally and is
+            // recovered by the queue drain at detection time.)
+            match self.first_alive(w) {
+                Some(d) => self.re_place(job_idx, task, d),
+                None => self.fail_job(job_idx),
+            }
+            return;
+        }
         let (base, model) = {
             let k = self.jobs[job_idx].job.kind.index();
             // Actual work follows the ground truth, not the profile claim.
@@ -728,6 +887,11 @@ impl Simulator {
             && self.workers[w].roll_straggler(self.cfg.straggler_prob)
         {
             runtime = (runtime as f64 * self.cfg.straggler_factor) as Micros;
+        }
+        // Transient slowdown fault: a degraded-but-alive worker. Pure
+        // window lookup, no RNG draw — inert when the plan has none.
+        if let Some(f) = self.fault_plan.slowdown_factor(w, self.now) {
+            runtime = (runtime as f64 * f) as Micros;
         }
         self.workers[w].enqueue(QTask {
             job_idx,
@@ -747,6 +911,163 @@ impl Simulator {
         self.try_dispatch(w);
     }
 
+    /// PCIe fetch completion, with transient-failure injection: a fetch
+    /// may fail and be retried with exponential backoff, and the *final*
+    /// allowed attempt always succeeds so retries terminate. Inert (no
+    /// RNG draw, no branch taken) when `fetch_fail_prob == 0`.
+    fn handle_fetch_done(&mut self, w: WorkerId, model: ModelId) {
+        if self.crashed[w] {
+            return;
+        }
+        if self.cfg.fault.fetch_fail_prob > 0.0 {
+            let slot = w * N_MODELS + model as usize;
+            let attempt = self.fetch_attempts[slot];
+            let last = attempt + 1 >= self.cfg.fault.retry.max_attempts;
+            if !last && self.fault_rng.f64() < self.cfg.fault.fetch_fail_prob {
+                self.fetch_attempts[slot] = attempt + 1;
+                self.fault_stats.task_retries += 1;
+                if self.tracer.on() {
+                    self.tracer.record(TraceEvent::TaskRetried {
+                        worker: w as u16,
+                        model,
+                        attempt: attempt as u16,
+                        t: self.now,
+                    });
+                }
+                // Back off, then redo the transfer; `fetching` stays set,
+                // so the PCIe bus remains (correctly) occupied throughout.
+                let at = self.now
+                    + self.cfg.fault.retry.backoff_us(attempt)
+                    + self.cfg.cost.td_model(model_bytes(model));
+                self.push_event(at, Event::FetchDone { w, model });
+                return;
+            }
+            self.fetch_attempts[slot] = 0;
+        }
+        self.workers[w].finish_fetch(model, self.now);
+        if self.tracer.on() {
+            self.tracer.record(TraceEvent::FetchEnd { worker: w as u16, model, t: self.now });
+        }
+        self.try_dispatch(w);
+    }
+
+    /// Terminal failure: the job can no longer make progress (no live
+    /// worker to run or re-place its tasks). Records a
+    /// [`JobOutcome::Failed`] row so the job still reaches a terminal
+    /// outcome and the event loop's completion accounting terminates.
+    fn fail_job(&mut self, job_idx: usize) {
+        if self.jobs[job_idx].completed {
+            return;
+        }
+        self.jobs[job_idx].completed = true;
+        self.completed_jobs += 1;
+        self.fault_stats.jobs_failed += 1;
+        let js = &self.jobs[job_idx];
+        self.records.push(JobRecord {
+            kind: js.job.kind,
+            arrival_us: js.job.arrival_us,
+            completion_us: self.now,
+            lower_bound_us: self.dfgs[js.job.kind.index()].lower_bound_us,
+            outcome: JobOutcome::Failed,
+        });
+    }
+
+    /// Void every in-flight input transfer for (job, task) and forget the
+    /// per-edge sent flags, so the next `assign_and_dispatch` re-requests
+    /// each predecessor output from its (durable) holder. The generation
+    /// bump makes stale `InputArrive` events self-identify.
+    fn invalidate_inputs(&mut self, job_idx: usize, task: TaskId) {
+        self.jobs[job_idx].placement_gen[task] += 1;
+        self.jobs[job_idx].inputs_arrived[task] = 0;
+        let dfg_idx = self.jobs[job_idx].job.kind.index();
+        let n_preds = self.dfgs[dfg_idx].preds[task].len();
+        for pi in 0..n_preds {
+            let p = self.dfgs[dfg_idx].preds[task][pi];
+            let slot =
+                self.dfgs[dfg_idx].succs[p].iter().position(|&s| s == task).expect("edge");
+            let edge = self.succ_off[dfg_idx][p] + slot;
+            self.jobs[job_idx].sent[edge] = false;
+        }
+    }
+
+    /// Re-place one task orphaned by a worker failure: invalidate its old
+    /// transfers and run it back through Algorithm 2 on `decider` (the
+    /// detecting worker). The dead row is poisoned, so every scheduler
+    /// steers the task elsewhere; re-placement accounting happens inside
+    /// `assign_and_dispatch`, shared with the pinned-join rescue path.
+    fn re_place(&mut self, job_idx: usize, task: TaskId, decider: WorkerId) {
+        if self.jobs[job_idx].completed || self.jobs[job_idx].done(task) {
+            return;
+        }
+        if self.alive_workers == 0 {
+            self.fail_job(job_idx);
+            return;
+        }
+        self.invalidate_inputs(job_idx, task);
+        self.assign_and_dispatch(job_idx, task, decider);
+    }
+
+    /// `detector` noticed `p` went silent: poison the SST row (all four
+    /// schedulers mask it from now on), drain the dead worker's queued and
+    /// running tasks, and re-place each orphan. Tasks merely *planned*
+    /// onto `p` (pinned joins with early-shipped inputs) get their
+    /// transfers invalidated here and are re-placed at assign time.
+    fn on_worker_failed(&mut self, p: WorkerId, detector: WorkerId) {
+        self.sst.poison(p, self.now);
+        self.fault_stats.workers_failed += 1;
+        if self.tracer.on() {
+            self.tracer.record(TraceEvent::WorkerFailed {
+                worker: p as u16,
+                detector: detector as u16,
+                t: self.now,
+            });
+        }
+        // Tasks planned-but-not-yet-dispatched onto p: their early-shipped
+        // inputs sit on a dead worker; void them so the forced assign-time
+        // re-placement re-requests everything.
+        for job_idx in 0..self.jobs.len() {
+            if self.jobs[job_idx].completed {
+                continue;
+            }
+            let n = self.dfgs[self.jobs[job_idx].job.kind.index()].len();
+            for task in 0..n {
+                if self.jobs[job_idx].adfg.get(task) == Some(p)
+                    && !self.jobs[job_idx].done(task)
+                    && self.jobs[job_idx].remaining_preds[task] > 0
+                {
+                    self.invalidate_inputs(job_idx, task);
+                }
+            }
+        }
+        let mut orphans = std::mem::take(&mut self.orphan_buf);
+        orphans.clear();
+        let crash_t = self.crash_at_us[p];
+        self.workers[p].crash(crash_t, &mut orphans);
+        // lint: hot-path
+        for k in 0..orphans.len() {
+            let (job_idx, task) = (orphans[k].job_idx, orphans[k].task);
+            self.re_place(job_idx, task, detector);
+        }
+        // lint: end-hot-path
+        self.orphan_buf = orphans;
+    }
+
+    /// Failure detection, run by `detector` on its own SST push tick: any
+    /// crashed peer whose row has gone stale past the heartbeat timeout is
+    /// declared dead. Rate-limited pushes double as heartbeats (§5.2), so
+    /// detection latency ≈ heartbeat timeout + one push interval.
+    fn detect_failures(&mut self, detector: WorkerId) {
+        let timeout = self.cfg.fault.heartbeat_timeout_us;
+        for p in 0..self.cfg.n_workers {
+            if p == detector || !self.crashed[p] {
+                continue;
+            }
+            if self.sst.is_stale(p, self.now, timeout) {
+                self.on_worker_failed(p, detector);
+            }
+        }
+    }
+
     /// Run the full workload to completion; returns metrics. Takes the
     /// jobs by reference so sweeps (and benches) can share one workload
     /// across many runs without cloning it per run.
@@ -763,6 +1084,13 @@ impl Simulator {
             self.push_event(0, Event::PushLoad { w });
             self.push_event(0, Event::PushCache { w });
         }
+        if self.fault_plan.has_crashes() {
+            for w in 0..self.cfg.n_workers {
+                if let Some(t) = self.fault_plan.crash_at[w] {
+                    self.push_event(t, Event::WorkerCrash { w });
+                }
+            }
+        }
 
         const MAX_EVENTS: u64 = 500_000_000;
         while let Some((at, ev)) = self.queue.pop() {
@@ -776,23 +1104,17 @@ impl Simulator {
             match ev {
                 Event::JobArrival { job_idx } => self.handle_job_arrival(job_idx),
                 Event::TaskEnqueue { w, job_idx, task } => self.handle_enqueue(w, job_idx, task),
-                Event::InputArrive { job_idx, task } => {
-                    self.jobs[job_idx].inputs_arrived[task] += 1;
-                    if let Some(w) = self.jobs[job_idx].adfg.get(task) {
-                        self.try_dispatch(w);
+                Event::InputArrive { job_idx, task, gen } => {
+                    // A stale generation means the task was re-placed
+                    // while this transfer was in flight: drop it.
+                    if gen == self.jobs[job_idx].placement_gen[task] {
+                        self.jobs[job_idx].inputs_arrived[task] += 1;
+                        if let Some(w) = self.jobs[job_idx].adfg.get(task) {
+                            self.try_dispatch(w);
+                        }
                     }
                 }
-                Event::FetchDone { w, model } => {
-                    self.workers[w].finish_fetch(model, self.now);
-                    if self.tracer.on() {
-                        self.tracer.record(TraceEvent::FetchEnd {
-                            worker: w as u16,
-                            model,
-                            t: self.now,
-                        });
-                    }
-                    self.try_dispatch(w);
-                }
+                Event::FetchDone { w, model } => self.handle_fetch_done(w, model),
                 Event::ExecDone { w, job_idx, task } => self.handle_exec_done(w, job_idx, task),
                 Event::BatchWindow { w, deadline } => {
                     // Stale once the hold it armed is gone (batch started).
@@ -803,23 +1125,47 @@ impl Simulator {
                 }
                 Event::BatchDone { w } => self.handle_batch_done(w),
                 Event::PushLoad { w } => {
-                    let ft = self.workers[w].ft_estimate(self.now, &self.cfg.cost.batch);
-                    self.sst.push_load(w, ft, self.now);
-                    if self.completed_jobs < self.jobs.len() {
-                        let at = self.now + self.cfg.push.load_interval_us;
-                        self.push_event(at, Event::PushLoad { w });
+                    // A crashed worker falls silent: no push, no re-arm.
+                    // The resulting SST staleness IS the failure signal.
+                    if !self.crashed[w] {
+                        let ft = self.workers[w].ft_estimate(self.now, &self.cfg.cost.batch);
+                        self.sst.push_load(w, ft, self.now);
+                        if self.completed_jobs < self.jobs.len() {
+                            let at = self.now + self.cfg.push.load_interval_us;
+                            self.push_event(at, Event::PushLoad { w });
+                        }
+                        if self.fault_plan.has_crashes() {
+                            self.detect_failures(w);
+                        }
                     }
                 }
                 Event::PushCache { w } => {
-                    let (bitmap, free) = {
-                        let g = &self.workers[w].gpu;
-                        (g.bitmap(), g.free_bytes())
-                    };
-                    self.sst.push_cache(w, bitmap, free, self.now);
-                    if self.completed_jobs < self.jobs.len() {
-                        let at = self.now + self.cfg.push.cache_interval_us;
-                        self.push_event(at, Event::PushCache { w });
+                    if !self.crashed[w] {
+                        let (bitmap, free) = {
+                            let g = &self.workers[w].gpu;
+                            (g.bitmap(), g.free_bytes())
+                        };
+                        self.sst.push_cache(w, bitmap, free, self.now);
+                        if self.completed_jobs < self.jobs.len() {
+                            let at = self.now + self.cfg.push.cache_interval_us;
+                            self.push_event(at, Event::PushCache { w });
+                        }
                     }
+                }
+                Event::WorkerCrash { w } => {
+                    self.crashed[w] = true;
+                    self.crash_at_us[w] = self.now;
+                    self.alive_workers -= 1;
+                }
+            }
+        }
+
+        // Backstop: if every worker died, surviving events drain and jobs
+        // that never got a detector are still owed a terminal outcome.
+        if self.fault_plan.has_crashes() {
+            for job_idx in 0..self.jobs.len() {
+                if !self.jobs[job_idx].completed {
+                    self.fail_job(job_idx);
                 }
             }
         }
@@ -859,6 +1205,7 @@ impl Simulator {
                 workers,
                 span_us: span,
                 incomplete: self.jobs.len() - self.completed_jobs,
+                faults: self.fault_stats,
             },
             events_processed: self.events_processed,
             sim_span_us: span,
@@ -1084,6 +1431,133 @@ mod tests {
         assert!(t.events.iter().any(
             |e| matches!(e, TraceEvent::BatchFormed { size, .. } if *size >= 2)
         ));
+    }
+
+    #[test]
+    fn inert_fault_knobs_do_not_perturb_the_run() {
+        // Fault knobs that enable nothing (seed/timeout changes only)
+        // must leave the run byte-identical: no extra events, no RNG
+        // perturbation, no fault counters.
+        let jobs = workload::poisson(2.0, 60, &[], 5);
+        let base = Simulator::simulate(ClusterConfig::default(), jobs.clone());
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.seed = 999;
+        cfg.fault.heartbeat_timeout_us = 5 * SEC;
+        let b = Simulator::simulate(cfg, jobs);
+        assert_eq!(base.events_processed, b.events_processed);
+        assert_eq!(base.sim_span_us, b.sim_span_us);
+        let la: Vec<_> = base.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<_> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        assert_eq!(la, lb);
+        assert_eq!(base.metrics.faults, crate::metrics::FaultStats::default());
+        assert_eq!(b.metrics.faults, crate::metrics::FaultStats::default());
+    }
+
+    #[test]
+    fn worker_crash_recovers_all_jobs() {
+        let jobs = workload::poisson(4.0, 80, &[], 11);
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.crashes = vec![(2, 3 * SEC)];
+        let rep = Simulator::simulate(cfg, jobs);
+        // Every job reaches a terminal outcome; with survivors around,
+        // none fail — disrupted ones complete Degraded.
+        assert_eq!(rep.metrics.jobs.len(), 80);
+        assert_eq!(rep.metrics.incomplete, 0);
+        assert_eq!(rep.metrics.faults.workers_failed, 1);
+        assert_eq!(rep.metrics.faults.jobs_failed, 0);
+        assert!(rep.metrics.faults.tasks_re_placed > 0, "crash mid-load orphaned nothing?");
+        assert!(rep.metrics.degraded_jobs() > 0);
+        assert!((rep.metrics.completion_rate() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crash_runs_are_deterministic() {
+        let jobs = workload::poisson(3.0, 60, &[], 7);
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.crash_rate = 0.3;
+        cfg.fault.fetch_fail_prob = 0.2;
+        cfg.fault.slowdown_rate = 0.3;
+        let a = Simulator::simulate(cfg.clone(), jobs.clone());
+        let b = Simulator::simulate(cfg, jobs);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.sim_span_us, b.sim_span_us);
+        assert_eq!(a.metrics.faults, b.metrics.faults);
+        let la: Vec<_> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<_> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn all_workers_dead_jobs_fail_terminally() {
+        use crate::core::MS;
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.crashes = (0..cfg.n_workers).map(|w| (w, MS)).collect();
+        let rep = Simulator::simulate(cfg, workload::poisson(1.0, 10, &[], 3));
+        assert_eq!(rep.metrics.jobs.len(), 10);
+        assert_eq!(rep.metrics.incomplete, 0);
+        assert_eq!(rep.metrics.faults.jobs_failed, 10);
+        assert!(rep.metrics.completion_rate() < 1e-9);
+    }
+
+    #[test]
+    fn fetch_retries_delay_but_complete() {
+        let jobs = workload::poisson(1.0, 20, &[], 9);
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.fetch_fail_prob = 0.5;
+        let rep = Simulator::simulate(cfg, jobs.clone());
+        assert_eq!(rep.metrics.incomplete, 0);
+        assert_eq!(rep.metrics.faults.jobs_failed, 0);
+        assert!(rep.metrics.faults.task_retries > 0, "cold caches fetched without failures?");
+        let base = Simulator::simulate(ClusterConfig::default(), jobs);
+        assert!(rep.metrics.mean_latency_s() > base.metrics.mean_latency_s());
+    }
+
+    #[test]
+    fn transient_slowdown_inflates_latency() {
+        let jobs = workload::poisson(2.0, 60, &[], 5);
+        let base = Simulator::simulate(ClusterConfig::default(), jobs.clone());
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.slowdown_rate = 1.0;
+        cfg.fault.slowdown_factor = 8.0;
+        cfg.fault.slowdown_us = 30 * SEC;
+        let slow = Simulator::simulate(cfg, jobs);
+        assert_eq!(slow.metrics.incomplete, 0);
+        assert!(slow.metrics.mean_latency_s() > base.metrics.mean_latency_s());
+        // No crashes involved: nothing failed, nothing re-placed.
+        assert_eq!(slow.metrics.faults, crate::metrics::FaultStats::default());
+    }
+
+    #[test]
+    fn net_faults_delay_remote_messages_deterministically() {
+        use crate::core::MS;
+        let jobs = workload::poisson(2.0, 40, &[], 13);
+        let mut cfg = ClusterConfig::default();
+        cfg.fault.delay_prob = 0.5;
+        cfg.fault.delay_us = 50 * MS;
+        cfg.fault.drop_prob = 0.2;
+        let a = Simulator::simulate(cfg.clone(), jobs.clone());
+        let b = Simulator::simulate(cfg, jobs.clone());
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.sim_span_us, b.sim_span_us);
+        assert_eq!(a.metrics.incomplete, 0);
+        let base = Simulator::simulate(ClusterConfig::default(), jobs);
+        assert!(a.metrics.mean_latency_s() > base.metrics.mean_latency_s());
+    }
+
+    #[test]
+    fn traced_crash_run_emits_fault_events() {
+        let mut cfg = ClusterConfig::default();
+        cfg.trace.enabled = true;
+        cfg.fault.crashes = vec![(1, 3 * SEC)];
+        let rep = Simulator::simulate(cfg, workload::poisson(4.0, 80, &[], 11));
+        let t = &rep.trace;
+        assert_eq!(rep.metrics.incomplete, 0);
+        assert_eq!(t.count(|e| matches!(e, TraceEvent::WorkerFailed { .. })), 1);
+        assert!(t.count(|e| matches!(e, TraceEvent::TaskRePlaced { .. })) > 0);
+        assert_eq!(
+            t.count(|e| matches!(e, TraceEvent::JobDegraded { .. })),
+            rep.metrics.degraded_jobs()
+        );
     }
 
     #[test]

@@ -210,6 +210,31 @@ impl SimWorker {
         self.busy.stop(now);
     }
 
+    /// Kill this worker (DESIGN.md §9): drain the executing batch and the
+    /// whole queue into `out` — every entry is an orphan the recovery path
+    /// re-places — and zero the incremental load accounting. `now` is the
+    /// *crash* time (not the later detection time): busy accounting must
+    /// not credit work past the death.
+    pub fn crash(&mut self, now: Micros, out: &mut Vec<QTask>) {
+        if !self.running.is_empty() {
+            for qt in self.running.drain(..) {
+                if let Some(m) = qt.model {
+                    self.gpu.unpin(m);
+                }
+                out.push(qt);
+            }
+            self.busy.stop(now);
+        }
+        while let Some(qt) = self.queue.pop_front() {
+            out.push(qt);
+        }
+        self.queued_runtime_us = 0;
+        self.queued_count = [0; N_MODELS];
+        self.queued_sum_us = [0; N_MODELS];
+        self.fetching = None;
+        self.hold_until = None;
+    }
+
     /// Sample the actual runtime for a new task instance around `base` µs.
     pub fn sample_runtime(&mut self, base: f64, rel_std: f64) -> Micros {
         self.rng.jitter(base, rel_std, 100.0) as Micros
@@ -412,6 +437,37 @@ mod tests {
         let row = w.live_row(5, &off());
         assert_eq!(row.cache_bitmap, 1 << BART);
         assert_eq!(row.ft_us, 5);
+    }
+
+    #[test]
+    fn crash_drains_running_and_queue() {
+        use crate::dfg::models::OPT;
+        let mut w = worker();
+        w.gpu.insert(OPT, 0);
+        w.enqueue(qt(0, Some(OPT), 10 * MS));
+        w.enqueue(qt(1, None, 20 * MS));
+        w.enqueue(qt(2, Some(OPT), 30 * MS));
+        w.start_task(0, 0, 10 * MS);
+        w.begin_fetch(OPT);
+        w.set_hold(500);
+        let mut orphans = Vec::new();
+        w.crash(5 * MS, &mut orphans);
+        // Running member first (it was in flight), then the queue in order.
+        assert_eq!(orphans.iter().map(|q| q.task).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(w.running().is_none());
+        assert!(w.queue().is_empty());
+        assert_eq!(w.fetching(), None);
+        assert_eq!(w.hold_until(), None);
+        assert_eq!(w.ft_estimate(5 * MS, &off()), 5 * MS, "load accounting zeroed");
+        // Pins released: eviction may plan against OPT again.
+        assert!(w.gpu.plan_eviction(w.gpu.capacity(), &[]).is_some());
+        // Busy time stops at the crash instant.
+        assert_eq!(w.metrics(10 * MS).busy_us, 5 * MS);
+        // Crashing an idle worker is a no-op on busy accounting.
+        let mut idle = worker();
+        let mut none = Vec::new();
+        idle.crash(1000, &mut none);
+        assert!(none.is_empty());
     }
 
     #[test]

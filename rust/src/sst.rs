@@ -10,6 +10,12 @@
 
 use crate::core::{Micros, WorkerId};
 
+/// Sentinel FT marking a row *poisoned*: its worker has been declared dead
+/// by the failure detector (DESIGN.md §9). Schedulers must treat a
+/// poisoned row as "never finishes" and mask the worker out *before* any
+/// finish-time arithmetic — adding to the sentinel would overflow.
+pub const POISONED_FT: Micros = Micros::MAX;
+
 /// The published, cache-line-sized row (paper Figure 5): fits in 64 bytes.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct SstRow {
@@ -23,6 +29,14 @@ pub struct SstRow {
     /// Push timestamps (diagnostics / staleness accounting).
     pub load_pushed_at: Micros,
     pub cache_pushed_at: Micros,
+}
+
+impl SstRow {
+    /// Has this worker been declared dead?
+    #[inline]
+    pub fn poisoned(&self) -> bool {
+        self.ft_us == POISONED_FT
+    }
 }
 
 /// Whole-cluster SST: the *published* view every worker replicates.
@@ -68,14 +82,50 @@ impl Sst {
         r.cache_pushed_at = now;
     }
 
+    /// Declare worker `w` dead: pin its FT to the [`POISONED_FT`] sentinel
+    /// so every scheduler masks it out, and stamp the push timestamps so
+    /// the row stops reading as stale (it is *known* dead, not silent).
+    /// Idempotent — detection races in the live cluster may claim twice.
+    pub fn poison(&mut self, w: WorkerId, now: Micros) {
+        let r = &mut self.rows[w];
+        if r.poisoned() {
+            return;
+        }
+        r.ft_us = POISONED_FT;
+        r.cache_bitmap = 0;
+        r.free_cache_bytes = 0;
+        r.load_pushed_at = now;
+        r.cache_pushed_at = now;
+    }
+
+    /// Failure-detector predicate (DESIGN.md §9): the heartbeat is the
+    /// existing load push, so a worker whose load half has not been pushed
+    /// within `timeout` is suspected dead. Already-poisoned rows are not
+    /// stale — they are resolved.
+    pub fn is_stale(&self, w: WorkerId, now: Micros, timeout: Micros) -> bool {
+        let r = &self.rows[w];
+        !r.poisoned() && now.saturating_sub(r.load_pushed_at) > timeout
+    }
+
     /// Worst-case load-information staleness across peers as seen at `now`.
+    /// Poisoned rows are excluded: a dead worker no longer pushes.
     pub fn max_load_staleness(&self, now: Micros) -> Micros {
-        self.rows.iter().map(|r| now.saturating_sub(r.load_pushed_at)).max().unwrap_or(0)
+        self.rows
+            .iter()
+            .filter(|r| !r.poisoned())
+            .map(|r| now.saturating_sub(r.load_pushed_at))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Worst-case cache-information staleness across peers as seen at `now`.
     pub fn max_cache_staleness(&self, now: Micros) -> Micros {
-        self.rows.iter().map(|r| now.saturating_sub(r.cache_pushed_at)).max().unwrap_or(0)
+        self.rows
+            .iter()
+            .filter(|r| !r.poisoned())
+            .map(|r| now.saturating_sub(r.cache_pushed_at))
+            .max()
+            .unwrap_or(0)
     }
 
     /// Per-row staleness of both halves at `now`: (load, cache), µs — the
@@ -162,6 +212,36 @@ mod tests {
     fn default_push_config_is_5_per_second() {
         let c = PushConfig::default();
         assert_eq!(c.load_interval_us, 200_000);
+    }
+
+    #[test]
+    fn poison_is_terminal_and_idempotent() {
+        let mut sst = Sst::new(2);
+        sst.push_load(0, 500, 100);
+        sst.push_cache(0, 0b11, 7, 100);
+        sst.poison(0, 1000);
+        assert!(sst.row(0).poisoned());
+        assert_eq!(sst.row(0).ft_us, POISONED_FT);
+        assert_eq!(sst.row(0).cache_bitmap, 0);
+        // Second claim (a detection race) changes nothing.
+        let snap = *sst.row(0);
+        sst.poison(0, 9999);
+        assert_eq!(*sst.row(0), snap);
+        assert!(!sst.row(1).poisoned());
+    }
+
+    #[test]
+    fn staleness_detector_thresholds() {
+        let mut sst = Sst::new(2);
+        sst.push_load(0, 0, 100);
+        sst.push_load(1, 0, 100);
+        assert!(!sst.is_stale(0, 300, 600));
+        assert!(sst.is_stale(0, 701, 600));
+        // A poisoned row is resolved, not stale — and drops out of the
+        // staleness monitoring maxima.
+        sst.poison(0, 800);
+        assert!(!sst.is_stale(0, 10_000, 600));
+        assert_eq!(sst.max_load_staleness(1100), 1000);
     }
 
     #[test]

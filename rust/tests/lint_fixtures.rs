@@ -241,7 +241,7 @@ fn crate_sources_lint_clean() {
 }
 
 /// The real exporter-exhaustiveness invariant, checked against the real
-/// sources: obs/mod.rs's TraceEvent enum parses to the 15 known variants.
+/// sources: obs/mod.rs's TraceEvent enum parses to the 20 known variants.
 #[test]
 fn l4_sees_the_real_trace_event_enum() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
@@ -267,6 +267,11 @@ fn l4_sees_the_real_trace_event_enum() {
             "SstStaleness",
             "BatchFormed",
             "BatchExecuted",
+            "WorkerFailed",
+            "TaskRetried",
+            "TaskRePlaced",
+            "JobDegraded",
+            "RuntimeLoadFailed",
         ]
     );
 }

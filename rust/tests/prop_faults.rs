@@ -1,0 +1,182 @@
+//! Property tests on the fault-injection invariants (DESIGN.md §9): a
+//! disabled fault config leaves the simulator bit-identical to the
+//! failure-free build (the subsystem must be *inert*, not just quiet),
+//! crashed-worker runs retire every task of every completed job exactly
+//! once (recovery re-executes orphans, never double-retires), and a
+//! seeded chaos run is deterministic end to end.
+
+use std::collections::HashMap;
+
+use compass::config::{ClusterConfig, SchedulerKind};
+use compass::core::{Micros, MS, SEC};
+use compass::dfg::pipelines;
+use compass::metrics::FaultStats;
+use compass::net::CostModel;
+use compass::obs::TraceEvent;
+use compass::util::prop::check;
+use compass::{workload, Simulator};
+
+/// Inert fault knobs — any setting that does not *enable* injection
+/// (heartbeat threshold, retry policy, fault seed, slowdown shape with a
+/// zero rate) — must leave every observable bit-identical to the default
+/// config. This is the empty-plan ⇒ byte-identical acceptance gate.
+#[test]
+fn prop_inert_fault_config_is_bit_identical() {
+    check("fault-off-identity", 31, |rng| {
+        let n_jobs = 10 + rng.below(30) as usize;
+        let rate = 0.5 + rng.f64() * 4.0;
+        let kind = SchedulerKind::ALL[rng.below(4) as usize];
+        let n_workers = 2 + rng.below(8) as usize;
+        let seed = rng.next_u64();
+        let jobs = workload::poisson(rate, n_jobs, &[], seed ^ 1);
+
+        let base = ClusterConfig::default()
+            .with_scheduler(kind)
+            .with_workers(n_workers)
+            .with_seed(seed);
+        let mut knobs = base.clone();
+        // Every rate stays zero; everything else is fair game.
+        knobs.fault.heartbeat_timeout_us = 100 * MS + rng.below(10 * SEC);
+        knobs.fault.retry.max_attempts = 1 + rng.below(6) as u32;
+        knobs.fault.retry.backoff_base_us = 1 + rng.below(SEC);
+        knobs.fault.seed = rng.next_u64();
+        knobs.fault.slowdown_factor = 1.0 + rng.f64() * 9.0;
+        knobs.fault.slowdown_us = rng.below(10 * SEC);
+        knobs.fault.crash_window_us = 1 + rng.below(30 * SEC);
+
+        let a = Simulator::simulate(base, jobs.clone());
+        let b = Simulator::simulate(knobs, jobs);
+        if a.events_processed != b.events_processed {
+            return Err(format!(
+                "event counts diverged: {} vs {}",
+                a.events_processed, b.events_processed
+            ));
+        }
+        if a.sim_span_us != b.sim_span_us {
+            return Err("sim span diverged".into());
+        }
+        let la: Vec<Micros> = a.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        let lb: Vec<Micros> = b.metrics.jobs.iter().map(|j| j.latency_us()).collect();
+        if la != lb {
+            return Err("per-job latencies diverged".into());
+        }
+        if a.metrics.mean_latency_s().to_bits() != b.metrics.mean_latency_s().to_bits()
+            || a.metrics.mean_slowdown().to_bits() != b.metrics.mean_slowdown().to_bits()
+        {
+            return Err("f64 aggregates not bit-identical".into());
+        }
+        if b.metrics.faults != FaultStats::default() {
+            return Err(format!("inert config reported fault activity: {:?}", b.metrics.faults));
+        }
+        Ok(())
+    });
+}
+
+/// Crashed-worker runs: every job reaches a terminal record, and every
+/// job that *completed* (cleanly or degraded) executed each of its tasks
+/// exactly once — recovery re-places orphans but never double-retires.
+#[test]
+fn prop_crash_runs_retire_each_task_exactly_once() {
+    check("crash-exactly-once", 32, |rng| {
+        let n_workers = 3 + rng.below(6) as usize;
+        let n_jobs = 15 + rng.below(30) as usize;
+        let seed = rng.next_u64();
+        let mut cfg = ClusterConfig::default().with_workers(n_workers).with_seed(seed);
+        cfg.trace.enabled = true;
+        cfg.fault.crash_rate = 0.2 + rng.f64() * 0.6;
+        cfg.fault.seed = rng.next_u64();
+        if rng.below(2) == 1 {
+            // Mix in an explicit early crash so recovery always triggers.
+            let w = rng.below(n_workers as u64) as usize;
+            cfg.fault.crashes = vec![(w, 1 + rng.below(5 * SEC))];
+        }
+        let jobs = workload::poisson(2.0, n_jobs, &[], seed ^ 1);
+        let rep = Simulator::simulate(cfg, jobs);
+
+        if rep.metrics.jobs.len() != n_jobs || rep.metrics.incomplete != 0 {
+            return Err(format!(
+                "{} records + {} incomplete for {n_jobs} jobs: not terminal",
+                rep.metrics.jobs.len(),
+                rep.metrics.incomplete
+            ));
+        }
+        if rep.trace.dropped != 0 {
+            return Err("trace ring overflowed; invariants unverifiable".into());
+        }
+
+        let cost = CostModel::default();
+        let mut kind_of = HashMap::new();
+        for ev in &rep.trace.events {
+            if let TraceEvent::JobArrive { job, kind, .. } = *ev {
+                kind_of.insert(job, kind);
+            }
+        }
+        let mut ends: HashMap<(u64, u16), usize> = HashMap::new();
+        for ev in &rep.trace.events {
+            if let TraceEvent::ExecEnd { job, task, .. } = *ev {
+                *ends.entry((job, task)).or_default() += 1;
+            }
+        }
+        for (&(job, task), &n) in &ends {
+            if n != 1 {
+                return Err(format!("task {task} of job {job} retired {n} times"));
+            }
+        }
+        // Completed (incl. degraded) jobs executed their whole pipeline.
+        for ev in &rep.trace.events {
+            if let TraceEvent::JobComplete { job, .. } = *ev {
+                let kind = kind_of[&job];
+                let n_tasks = pipelines::by_kind(kind, &cost).len();
+                for task in 0..n_tasks {
+                    if !ends.contains_key(&(job, task as u16)) {
+                        return Err(format!(
+                            "job {job} completed but task {task} never retired"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A seeded chaos run — crashes, slowdowns, fetch failures, fabric faults
+/// all at once — is deterministic: two identical invocations agree on
+/// every record and every fault counter.
+#[test]
+fn prop_chaos_runs_are_deterministic() {
+    check("chaos-determinism", 33, |rng| {
+        let seed = rng.next_u64();
+        let mk = |seed: u64, fault_seed: u64| {
+            let mut cfg = ClusterConfig::default().with_seed(seed);
+            cfg.fault.crash_rate = 0.3;
+            cfg.fault.slowdown_rate = 0.3;
+            cfg.fault.fetch_fail_prob = 0.2;
+            cfg.fault.drop_prob = 0.1;
+            cfg.fault.delay_prob = 0.2;
+            cfg.fault.seed = fault_seed;
+            let jobs = workload::poisson(2.0, 25, &[], seed ^ 1);
+            Simulator::simulate(cfg, jobs)
+        };
+        let fault_seed = rng.next_u64();
+        let a = mk(seed, fault_seed);
+        let b = mk(seed, fault_seed);
+        if a.events_processed != b.events_processed {
+            return Err("event counts diverged across identical runs".into());
+        }
+        if a.metrics.faults != b.metrics.faults {
+            return Err(format!(
+                "fault stats diverged: {:?} vs {:?}",
+                a.metrics.faults, b.metrics.faults
+            ));
+        }
+        let la: Vec<(Micros, bool)> =
+            a.metrics.jobs.iter().map(|j| (j.completion_us, j.failed())).collect();
+        let lb: Vec<(Micros, bool)> =
+            b.metrics.jobs.iter().map(|j| (j.completion_us, j.failed())).collect();
+        if la != lb {
+            return Err("job records diverged across identical runs".into());
+        }
+        Ok(())
+    });
+}
